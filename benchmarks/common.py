@@ -1,0 +1,97 @@
+"""Shared benchmark world: datasets, engine with cache profiles, registry,
+query generation (paper §6.1: templates with 2-4 semantic placeholders),
+and gold-plan execution."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.cache.store import CacheStore
+from repro.core import Query, RelFilter, SemFilter, SemMap, execute_plan
+from repro.core.physical import PhysicalPlan, PhysicalPlanStage
+from repro.data.synthetic import (Dataset, make_dataset, make_planted_params,
+                                  paper_datasets, planted_config)
+from repro.serving.engine import ServingEngine
+from repro.serving.operators import make_registry
+
+SM_RATIOS = (0.8, 0.5, 0.0)
+LG_RATIOS = (0.8, 0.6, 0.3)
+ALL_RATIOS = sorted({0.0, *SM_RATIOS, *LG_RATIOS})
+
+
+@dataclass
+class World:
+    datasets: Dict[str, Dataset]
+    engine: ServingEngine
+    registry: object
+    registry_nocomp: object     # Exp 2 baseline: uncompressed caches only
+
+
+def build_world(scale: float = 0.3, cache_dir: str | None = None,
+                dataset_names: Sequence[str] | None = None) -> World:
+    datasets = paper_datasets(scale)
+    if dataset_names:
+        datasets = {k: v for k, v in datasets.items() if k in dataset_names}
+    store = CacheStore(cache_dir or tempfile.mkdtemp(prefix="stretto_cache_"))
+    eng = ServingEngine(store)
+    for size in ("sm", "lg"):
+        cfg = planted_config(size)
+        eng.register_model(size, cfg, make_planted_params(cfg, seed=1))
+    t0 = time.time()
+    for name, ds in datasets.items():
+        for size in ("sm", "lg"):
+            eng.build_profiles(size, ds.items, ratios=ALL_RATIOS,
+                               prefill_batch=48)
+        print(f"[world] cache profiles built for {name} "
+              f"({len(ds.items)} items, {time.time() - t0:.0f}s elapsed)")
+    registry = make_registry(eng, sm_ratios=SM_RATIOS, lg_ratios=LG_RATIOS)
+    registry_nocomp = make_registry(eng, sm_ratios=(0.0,), lg_ratios=())
+    return World(datasets, eng, registry, registry_nocomp)
+
+
+def generate_queries(ds: Dataset, n_queries: int, target: float,
+                     seed: int = 0) -> List[Query]:
+    """Paper-style templates: 2-4 semantic operator slots, filled from the
+    dataset's filter/map pools, shuffled, non-empty guaranteed by
+    construction (planted labels are balanced)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    templates = [("f", "f"), ("f", "m"), ("f", "f", "m"),
+                 ("f", "m", "m"), ("f", "f", "f"), ("f", "f", "m", "m")]
+    for qi in range(n_queries):
+        t = templates[qi % len(templates)]
+        nodes = []
+        f_pool = list(rng.permutation(ds.n_filter_tasks))
+        m_pool = list(rng.permutation(ds.n_map_tasks))
+        for slot in t:
+            if slot == "f" and f_pool:
+                k = int(f_pool.pop())
+                nodes.append(SemFilter(f"filter task {k}", k))
+            elif m_pool:
+                k = int(m_pool.pop())
+                nodes.append(SemMap(f"map task {k}", k))
+        rng.shuffle(nodes)
+        out.append(Query(nodes, target_recall=target,
+                         target_precision=target))
+    return out
+
+
+def gold_plan_for(query: Query, registry) -> PhysicalPlan:
+    stages = []
+    for li, op in enumerate(query.semantic_ops):
+        ops = registry(op)
+        stages.append(PhysicalPlanStage(
+            li, 0, ops[-1].name, 0.0, 0.0,
+            isinstance(op, SemMap), True, 1.0))
+    return PhysicalPlan(stages, list(query.relational_ops), 0.0, 1.0, 1.0,
+                        True)
+
+
+def execute_gold(query: Query, items, registry):
+    return execute_plan(gold_plan_for(query, registry), query, items,
+                        registry)

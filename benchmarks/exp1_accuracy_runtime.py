@@ -1,0 +1,85 @@
+"""Exp 1 (paper Fig. 5): global quality guarantees + runtime vs baselines.
+
+For each dataset x query x target we plan with Stretto / Lotus(SupG) /
+Pareto-Cascades, execute on the full corpus, and report the Target-Met
+metric (achieved / target, >= 1 means met) and measured runtime.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import World, execute_gold, generate_queries
+from repro.core import (PlannerConfig, evaluate_vs_gold, execute_plan,
+                        plan_query)
+from repro.core.baselines import plan_lotus, plan_pareto_cascades
+
+
+def run(world: World, targets=(0.5, 0.7, 0.9), n_queries: int = 4,
+        planner_cfg: PlannerConfig | None = None,
+        sample_frac: float = 0.15) -> List[Dict]:
+    planner_cfg = planner_cfg or PlannerConfig(steps=250, restarts=3)
+    rows = []
+    for ds_name, ds in world.datasets.items():
+        for target in targets:
+            queries = generate_queries(ds, n_queries, target,
+                                       seed=hash(ds_name) % 1000)
+            for qi, q in enumerate(queries):
+                gold = execute_gold(q, ds.items, world.registry)
+                for method, planner in (
+                        ("stretto", lambda q: plan_query(
+                            q, ds.items, world.registry, planner_cfg,
+                            sample_frac=sample_frac)),
+                        ("lotus", lambda q: plan_lotus(
+                            q, ds.items, world.registry,
+                            sample_frac=sample_frac)),
+                        ("pareto", lambda q: plan_pareto_cascades(
+                            q, ds.items, world.registry,
+                            sample_frac=sample_frac))):
+                    t0 = time.perf_counter()
+                    plan = planner(q)
+                    res = execute_plan(plan, q, ds.items, world.registry)
+                    m = evaluate_vs_gold(res, gold, q.semantic_ops)
+                    rows.append({
+                        "dataset": ds_name, "query": qi, "target": target,
+                        "method": method,
+                        "recall": m["recall"], "precision": m["precision"],
+                        "target_met_recall": m["recall"] / target,
+                        "target_met_precision": m["precision"] / target,
+                        "runtime_s": res.runtime_s,
+                        "gold_runtime_s": gold.runtime_s,
+                        "plan_time_s": plan.planning_time_s,
+                        "feasible": plan.feasible,
+                        "n_llm_tuples": res.n_llm_tuples,
+                        "wall_s": time.perf_counter() - t0,
+                    })
+    return rows
+
+
+def summarize(rows: List[Dict]) -> List[str]:
+    out = ["exp1: Target-Met (5th pct / median) and runtime by method"]
+    for method in ("stretto", "lotus", "pareto"):
+        sub = [r for r in rows if r["method"] == method]
+        if not sub:
+            continue
+        tmr = np.array([r["target_met_recall"] for r in sub])
+        tmp_ = np.array([r["target_met_precision"] for r in sub])
+        rt = np.array([r["runtime_s"] for r in sub])
+        grt = np.array([r["gold_runtime_s"] for r in sub])
+        frac_met = float(np.mean((tmr >= 1.0) & (tmp_ >= 1.0)))
+        out.append(
+            f"  {method:8s} met={frac_met:.2f} "
+            f"tm_recall_p5={np.percentile(tmr, 5):.3f} "
+            f"tm_prec_p5={np.percentile(tmp_, 5):.3f} "
+            f"runtime_med={np.median(rt):.2f}s "
+            f"speedup_vs_gold={np.median(grt / np.maximum(rt, 1e-9)):.2f}x")
+    stre = [r for r in rows if r["method"] == "stretto"]
+    lot = [r for r in rows if r["method"] == "lotus"]
+    if stre and lot:
+        sp = np.median(np.array([l["runtime_s"] for l in lot])
+                       / np.maximum([s["runtime_s"] for s in stre], 1e-9))
+        out.append(f"  stretto speedup vs lotus (median): {sp:.2f}x")
+    return out

@@ -1,0 +1,102 @@
+"""Exp 2 (paper Fig. 6, Table 1, Fig. 7): KV-cache-enabled operators.
+
+(a) Cost-quality trade-off per profile: single-operator queries evaluated
+    at every (model, ratio) — the compression ladder (Fig. 6).
+(b) Speedup from adding compressed profiles to the search space vs a
+    baseline limited to uncompressed precomputed caches (Table 1).
+(c) Operator-selection frequency across optimized plans (Fig. 7).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (LG_RATIOS, SM_RATIOS, World, execute_gold,
+                               generate_queries)
+from repro.core import (PlannerConfig, SemFilter, SemMap, evaluate_vs_gold,
+                        execute_plan, plan_query)
+from repro.data.synthetic import (TOK_NO, TOK_YES, filter_query_token,
+                                  map_query_token, value_token)
+
+
+def ladder(world: World, ds_name: str, n_tasks: int = 4) -> List[Dict]:
+    """(a): quality + runtime of every profile on single-op queries."""
+    ds = world.datasets[ds_name]
+    ids = [it.item_id for it in ds.items]
+    rows = []
+    for size, ratios in (("sm", SM_RATIOS), ("lg", (0.0,) + LG_RATIOS)):
+        for ratio in sorted(set(ratios)):
+            f1s, rts = [], []
+            for task in range(min(n_tasks, ds.n_filter_tasks)):
+                t0 = time.perf_counter()
+                lo = world.engine.run_filter(
+                    size, ratio, ids, [filter_query_token(task)],
+                    TOK_YES, TOK_NO)
+                rts.append(time.perf_counter() - t0)
+                gold_lo = world.engine.run_filter(
+                    "lg", 0.0, ids, [filter_query_token(task)],
+                    TOK_YES, TOK_NO)
+                pred, gold = lo > 0, gold_lo > 0
+                tp = (pred & gold).sum()
+                prec = tp / max(pred.sum(), 1)
+                rec = tp / max(gold.sum(), 1)
+                f1s.append(2 * prec * rec / max(prec + rec, 1e-9))
+            rows.append({"dataset": ds_name, "model": size, "ratio": ratio,
+                         "f1_vs_gold": float(np.mean(f1s)),
+                         "runtime_s": float(np.mean(rts))})
+    return rows
+
+
+def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
+                             n_queries: int = 3,
+                             planner_cfg: PlannerConfig | None = None,
+                             sample_frac: float = 0.15) -> List[Dict]:
+    """(b): Stretto with the full compression ladder vs Stretto restricted
+    to uncompressed precomputed caches (the paper's Table 1 baseline)."""
+    planner_cfg = planner_cfg or PlannerConfig(steps=250, restarts=3)
+    rows = []
+    for ds_name, ds in world.datasets.items():
+        for target in targets:
+            queries = generate_queries(ds, n_queries, target, seed=71)
+            for qi, q in enumerate(queries):
+                rt = {}
+                sel_counter = collections.Counter()
+                for tag, registry in (("full", world.registry),
+                                      ("nocomp", world.registry_nocomp)):
+                    plan = plan_query(q, ds.items, registry, planner_cfg,
+                                      sample_frac=sample_frac)
+                    res = execute_plan(plan, q, ds.items, registry)
+                    rt[tag] = res.runtime_s
+                    if tag == "full":
+                        for s in plan.stages:
+                            sel_counter[s.op_name] += 1
+                rows.append({
+                    "dataset": ds_name, "target": target, "query": qi,
+                    "runtime_full_s": rt["full"],
+                    "runtime_nocomp_s": rt["nocomp"],
+                    "speedup": rt["nocomp"] / max(rt["full"], 1e-9),
+                    "selected_ops": dict(sel_counter),
+                })
+    return rows
+
+
+def summarize(ladder_rows, speedup_rows) -> List[str]:
+    out = ["exp2a: compression-ladder profiles (f1 vs gold, runtime)"]
+    for r in ladder_rows:
+        out.append(f"  {r['model']}-r{r['ratio']:.1f} "
+                   f"f1={r['f1_vs_gold']:.3f} t={r['runtime_s']:.2f}s")
+    out.append("exp2b: speedup from compressed profiles (vs uncompressed "
+               "precomputed caches)")
+    for tgt in sorted({r["target"] for r in speedup_rows}):
+        sub = [r["speedup"] for r in speedup_rows if r["target"] == tgt]
+        out.append(f"  target {tgt}: avg speedup {np.mean(sub):.2f}x "
+                   f"(n={len(sub)})")
+    sel = collections.Counter()
+    for r in speedup_rows:
+        sel.update(r["selected_ops"])
+    out.append("exp2c: operator selection frequency: " +
+               ", ".join(f"{k}:{v}" for k, v in sel.most_common(8)))
+    return out

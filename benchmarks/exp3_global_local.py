@@ -1,0 +1,63 @@
+"""Exp 3 (paper Fig. 8): global vs local vs independence-assuming
+optimization — all gradient-based, same search space, different loss."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import World, execute_gold, generate_queries
+from repro.core import (PlannerConfig, evaluate_vs_gold, execute_plan,
+                        plan_query)
+from repro.core.baselines import plan_stretto_independent, plan_stretto_local
+
+
+def run(world: World, targets=(0.7, 0.9), n_queries: int = 3,
+        planner_cfg: PlannerConfig | None = None,
+        sample_frac: float = 0.15) -> List[Dict]:
+    planner_cfg = planner_cfg or PlannerConfig(steps=250, restarts=3)
+    rows = []
+    for ds_name, ds in world.datasets.items():
+        for target in targets:
+            queries = generate_queries(ds, n_queries, target, seed=29)
+            for qi, q in enumerate(queries):
+                gold = execute_gold(q, ds.items, world.registry)
+                for method, planner in (
+                        ("global", lambda q: plan_query(
+                            q, ds.items, world.registry, planner_cfg,
+                            sample_frac=sample_frac)),
+                        ("local", lambda q: plan_stretto_local(
+                            q, ds.items, world.registry, planner_cfg,
+                            sample_frac=sample_frac)),
+                        ("independent", lambda q: plan_stretto_independent(
+                            q, ds.items, world.registry, planner_cfg,
+                            sample_frac=sample_frac))):
+                    plan = planner(q)
+                    res = execute_plan(plan, q, ds.items, world.registry)
+                    m = evaluate_vs_gold(res, gold, q.semantic_ops)
+                    rows.append({
+                        "dataset": ds_name, "target": target, "query": qi,
+                        "method": method, "recall": m["recall"],
+                        "precision": m["precision"],
+                        "met": (m["recall"] >= target
+                                and m["precision"] >= target),
+                        "runtime_s": res.runtime_s,
+                    })
+    return rows
+
+
+def summarize(rows: List[Dict]) -> List[str]:
+    out = ["exp3: global vs local vs independence ablation"]
+    for method in ("global", "local", "independent"):
+        sub = [r for r in rows if r["method"] == method]
+        if not sub:
+            continue
+        out.append(
+            f"  {method:12s} met={np.mean([r['met'] for r in sub]):.2f} "
+            f"runtime_med={np.median([r['runtime_s'] for r in sub]):.2f}s")
+    g = np.median([r["runtime_s"] for r in rows if r["method"] == "global"])
+    l = np.median([r["runtime_s"] for r in rows if r["method"] == "local"])
+    if g and l:
+        out.append(f"  local/global runtime ratio: {l / max(g, 1e-9):.2f}x")
+    return out

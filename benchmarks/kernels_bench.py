@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: jnp-oracle wall time on CPU (the TPU numbers come
+from the dry-run roofline; CPU timing here only sanity-checks the wrappers)
+plus lowering checks for the Pallas kernels."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[Dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # decode attention: serving hot loop shapes
+    for (B, KV, G, dk, S) in [(8, 8, 4, 128, 2048), (32, 2, 2, 64, 512)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, KV, G, dk), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, S, KV, dk), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, S, KV, dk), jnp.float32)
+        lens = jnp.full((B,), S, jnp.int32)
+        f = jax.jit(lambda *a: ops.decode_attention(*a, backend="ref"))
+        dt = _time(f, q, kc, vc, lens)
+        flops = 4.0 * B * KV * G * dk * S
+        rows.append({"name": f"decode_attn_B{B}_S{S}",
+                     "us_per_call": dt * 1e6,
+                     "derived": f"{flops / dt / 1e9:.1f}GFLOP/s_cpu_ref"})
+    # expected attention scoring
+    ks = jax.random.split(key, 3)
+    kc = jax.random.normal(ks[0], (4, 1024, 8, 128), jnp.float32)
+    mu = jax.random.normal(ks[1], (8, 4, 128), jnp.float32)
+    sg = jnp.abs(jax.random.normal(ks[2], (8, 4, 128), jnp.float32))
+    f = jax.jit(lambda *a: ops.expected_attention_scores(*a, backend="ref"))
+    dt = _time(f, kc, mu, sg)
+    rows.append({"name": "expected_attention_4x1024", "us_per_call": dt * 1e6,
+                 "derived": "scores"})
+    # pallas interpret-mode correctness spot check (1 shape each)
+    q = jax.random.normal(key, (1, 2, 2, 64), jnp.float32)
+    kc = jax.random.normal(key, (1, 128, 2, 64), jnp.float32)
+    vc = jax.random.normal(key, (1, 128, 2, 64), jnp.float32)
+    lens = jnp.asarray([100], jnp.int32)
+    d = ops.decode_attention(q, kc, vc, lens, backend="interpret")
+    r = ref.decode_attention_ref(q, kc, vc, lens)
+    err = float(jnp.max(jnp.abs(d - r)))
+    rows.append({"name": "decode_attn_pallas_interpret_err",
+                 "us_per_call": 0.0, "derived": f"maxerr={err:.2e}"})
+    return rows

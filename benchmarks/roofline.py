@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run artifacts (results/dryrun_*)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(out_dir: str = "results/dryrun_sp") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs: List[Dict]) -> List[str]:
+    out = [f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'dominant':>10s} "
+           f"{'useful':>6s} {'mem_GB':>7s}"]
+    for r in recs:
+        if not r.get("ok"):
+            out.append(f"{r['arch']:24s} {r['shape']:12s} FAILED: "
+                       f"{r.get('error', '')[:80]}")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{rf['compute_s']:10.3e} {rf['memory_s']:10.3e} "
+            f"{rf['collective_s']:10.3e} {rf['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:6.2f} "
+            f"{r['per_device_bytes']['total'] / 1e9:7.1f}")
+    return out
+
+
+def csv_rows(recs: List[Dict]) -> List[Dict]:
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            "us_per_call": rf["bound_s"] * 1e6,
+            "derived": (f"dom={rf['dominant']};useful="
+                        f"{r['useful_flops_ratio']:.2f}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for line in table(load()):
+        print(line)

@@ -1,0 +1,109 @@
+"""Benchmark entry point — one harness per paper table/figure.
+
+Default (no args) runs a bounded configuration suitable for CI/CPU
+(~10-20 min): 2 datasets at 30% scale, 3 queries per (dataset, target).
+``--full`` approaches paper scale (5 datasets, more queries).
+
+Prints a ``name,us_per_call,derived`` CSV plus human-readable summaries.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--out", type=str, default="results/bench")
+    args = ap.parse_args()
+
+    from benchmarks import (exp1_accuracy_runtime as E1,
+                            exp2_kv_cache as E2, exp3_global_local as E3,
+                            kernels_bench, roofline)
+    from benchmarks.common import build_world
+    from repro.core import PlannerConfig
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    scale = args.scale or (1.0 if args.full else 0.25)
+    names = None if args.full else ("movies", "artwork")
+    nq = 6 if args.full else 2
+    targets = (0.5, 0.7, 0.9) if args.full else (0.7, 0.9)
+    cfg = PlannerConfig(steps=300 if args.full else 200,
+                        restarts=4 if args.full else 3)
+
+    print(f"# building world (scale={scale}) ...", flush=True)
+    world = build_world(scale=scale, dataset_names=names)
+
+    csv_rows = []
+
+    print("# exp1 (Fig 5): guarantees + runtime vs baselines", flush=True)
+    rows1 = E1.run(world, targets=targets, n_queries=nq, planner_cfg=cfg)
+    with open(f"{args.out}/exp1.json", "w") as f:
+        json.dump(rows1, f, indent=1)
+    for line in E1.summarize(rows1):
+        print(line)
+    for method in ("stretto", "lotus", "pareto"):
+        sub = [r for r in rows1 if r["method"] == method]
+        if sub:
+            import numpy as np
+            csv_rows.append({
+                "name": f"exp1_runtime_{method}",
+                "us_per_call": float(np.median(
+                    [r["runtime_s"] for r in sub])) * 1e6,
+                "derived": f"met={np.mean([(r['target_met_recall'] >= 1) & (r['target_met_precision'] >= 1) for r in sub]):.2f}"})
+
+    print("# exp2 (Fig 6/Table 1/Fig 7): KV-cache operators", flush=True)
+    first_ds = next(iter(world.datasets))
+    lad = E2.ladder(world, first_ds)
+    spd = E2.speedup_with_compression(world, targets=targets,
+                                      n_queries=max(nq - 1, 1),
+                                      planner_cfg=cfg)
+    with open(f"{args.out}/exp2.json", "w") as f:
+        json.dump({"ladder": lad, "speedup": spd}, f, indent=1)
+    for line in E2.summarize(lad, spd):
+        print(line)
+    import numpy as np
+    csv_rows.append({
+        "name": "exp2_speedup_with_compression",
+        "us_per_call": 0.0,
+        "derived": f"avg={np.mean([r['speedup'] for r in spd]):.2f}x"})
+
+    print("# exp3 (Fig 8): global vs local vs independent", flush=True)
+    rows3 = E3.run(world, targets=targets, n_queries=max(nq - 1, 1),
+                   planner_cfg=cfg)
+    with open(f"{args.out}/exp3.json", "w") as f:
+        json.dump(rows3, f, indent=1)
+    for line in E3.summarize(rows3):
+        print(line)
+
+    print("# kernel microbenches", flush=True)
+    krows = kernels_bench.run()
+    csv_rows.extend(krows)
+
+    print("# roofline (from dry-run artifacts, if present)", flush=True)
+    recs = roofline.load("results/dryrun_sp")
+    if recs:
+        for line in roofline.table(recs)[:40]:
+            print(line)
+        csv_rows.extend(roofline.csv_rows(recs))
+    else:
+        print("  (run `python -m repro.launch.dryrun --all --out "
+              "results/dryrun_sp` first)")
+
+    print("\nname,us_per_call,derived")
+    for r in csv_rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    print(f"\n# total benchmark wall time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

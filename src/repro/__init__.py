@@ -1,0 +1,12 @@
+"""repro — Stretto execution engine reproduction on JAX/TPU.
+
+Layers:
+  repro.core      — the paper's contribution (global optimizer + plan layer)
+  repro.models    — config-driven model zoo (10 assigned archs + paper arch)
+  repro.cache     — KV-cache profiles (Expected-Attention compression ladder)
+  repro.serving   — prefill-skip batched execution engine
+  repro.kernels   — Pallas TPU kernels + jnp oracles
+  repro.training  — train step / optimizer / checkpoints / fault tolerance
+  repro.launch    — meshes, dry-run, launchers
+"""
+__version__ = "1.0.0"

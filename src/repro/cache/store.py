@@ -1,0 +1,101 @@
+"""On-disk KV-cache repository (paper §5, Fig. 4).
+
+One *profile* = (model_name, compression ratio). The store holds one
+compressed cache per (profile, item) as an .npz shard, written once in the
+offline phase and memory-mapped at query time. `load_batch` re-pads a set
+of items to the max compressed length in the batch — the paper's batching
+scheme — and returns a decode-ready cache pytree.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Profile:
+    model_name: str
+    ratio: float
+
+    @property
+    def tag(self) -> str:
+        return f"{self.model_name}__r{int(round(self.ratio * 100)):02d}"
+
+
+class CacheStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._mem: Dict[Tuple[str, int], Dict[str, np.ndarray]] = {}
+
+    def _path(self, profile: Profile, item_id: int) -> str:
+        d = os.path.join(self.root, profile.tag)
+        return os.path.join(d, f"{item_id}.npz")
+
+    def save(self, profile: Profile, item_id: int,
+             arrays: Dict[str, np.ndarray], length: int):
+        path = self._path(profile, item_id)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        np.savez(path, __length__=np.int32(length),
+                 **{k: np.asarray(v) for k, v in arrays.items()})
+        self._mem[(profile.tag, item_id)] = {
+            "__length__": np.int32(length),
+            **{k: np.asarray(v) for k, v in arrays.items()}}
+
+    def load(self, profile: Profile, item_id: int) -> Dict[str, np.ndarray]:
+        key = (profile.tag, item_id)
+        if key not in self._mem:
+            with np.load(self._path(profile, item_id)) as z:
+                self._mem[key] = {k: z[k] for k in z.files}
+        return self._mem[key]
+
+    def has(self, profile: Profile, item_id: int) -> bool:
+        return ((profile.tag, item_id) in self._mem
+                or os.path.exists(self._path(profile, item_id)))
+
+    def storage_bytes(self, profile: Profile) -> int:
+        d = os.path.join(self.root, profile.tag)
+        if not os.path.isdir(d):
+            return 0
+        return sum(os.path.getsize(os.path.join(d, f))
+                   for f in os.listdir(d))
+
+    def load_batch(self, cfg: ModelConfig, profile: Profile,
+                   item_ids: Sequence[int], pad_to_multiple: int = 32,
+                   headroom: int = 0) -> Tuple[Dict[str, Any], np.ndarray]:
+        """Assemble a right-padded decode cache for a batch of items.
+
+        Returns (cache pytree with leaves (L, B, S_max, ...) + 'lengths',
+        lengths array). Padding to the max compressed length in the batch
+        is the paper's execution-time batching scheme. `headroom` reserves
+        slots for the operator query + generated tokens.
+        """
+        shards = [self.load(profile, i) for i in item_ids]
+        lengths = np.array([int(s["__length__"]) for s in shards], np.int32)
+        smax = int(lengths.max()) + headroom
+        smax = ((smax + pad_to_multiple - 1) // pad_to_multiple
+                * pad_to_multiple)
+        cache: Dict[str, Any] = {}
+        seq_keys = {"k", "v", "c_kv", "k_rope"}
+        for key in shards[0]:
+            if key == "__length__":
+                continue
+            per = []
+            for s in shards:
+                a = s[key]
+                if key in seq_keys:   # (L, S', ...) -> pad S' to smax
+                    pad = [(0, 0)] * a.ndim
+                    pad[1] = (0, smax - a.shape[1])
+                    a = np.pad(a, pad)
+                per.append(a)
+            stacked = np.stack(per, axis=1)       # (L, B, ...)
+            cache[key] = jnp.asarray(stacked)
+        cache["lengths"] = jnp.asarray(lengths)
+        return cache, lengths

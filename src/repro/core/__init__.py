@@ -1,0 +1,14 @@
+"""Stretto core: the paper's contribution as a composable JAX module."""
+from repro.core.bounds import (beta_lower_bound, betaincinv,
+                               precision_lower_bound, recall_lower_bound)
+from repro.core.executor import (ExecutionResult, evaluate_vs_gold,
+                                 execute_plan)
+from repro.core.logical import (Query, RelFilter, SemFilter, SemMap,
+                                pull_up_semantic)
+from repro.core.optimizer import OptimizedPlan, PlannerConfig, optimize_query
+from repro.core.physical import (PhysicalOperator, PhysicalPlan,
+                                 PhysicalPlanStage, ProfiledPipeline)
+from repro.core.planner import plan_query
+from repro.core.profiling import profile_query
+from repro.core.relaxation import (PipelineData, PipelineParams, QueryCounts,
+                                   query_counts, simulate_pipeline)

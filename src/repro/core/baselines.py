@@ -1,0 +1,353 @@
+"""Baseline optimizers from the paper's Exp 1 / Exp 3, integrated into the
+same planning/execution stack as Stretto:
+
+  LotusSupG       — per-operator guarantees, global target split evenly,
+                    two-stage cascades (small uncompressed model -> gold),
+                    thresholds from frequentist normal-approx bounds (SupG).
+  ParetoCascades  — Abacus-style combinatorial search over cascade configs
+                    with fixed default thresholds; picks the cheapest plan
+                    meeting targets ON THE SAMPLE (no statistical guarantee).
+  StrettoLocal    — ablation: the gradient optimizer, but per-operator with
+                    evenly split targets (Exp 3).
+  StrettoIndependent — ablation: joint optimization, but the global bound is
+                    the product of per-operator bounds at credibility
+                    alpha^(1/m) (independence assumption; Exp 3).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds as B
+from repro.core import relaxation as R
+from repro.core.logical import Query, SemFilter, SemMap, pull_up_semantic
+from repro.core.optimizer import (OptimizedPlan, PlannerConfig,
+                                  _unflatten_params, init_pipeline_params,
+                                  optimize_query)
+from repro.core.physical import PhysicalPlan, PhysicalPlanStage
+from repro.core.planner import (_gold_membership, _pipelines_data,
+                                _selectivities)
+from repro.core.profiling import profile_query
+
+
+def _normal_lower(p_hat: float, n: int, z: float = 1.645) -> float:
+    """One-sided 95% normal-approximation lower bound (Lotus/SupG style)."""
+    if n == 0:
+        return 0.0
+    return p_hat - z * np.sqrt(max(p_hat * (1 - p_hat), 1e-9) / n)
+
+
+def _plan_from_selection(profiles, selections, thresholds, items_n,
+                         bounds=(0.0, 0.0), feasible=True,
+                         est_cost=0.0, t_plan=0.0) -> PhysicalPlan:
+    """selections: per logical op, list of chosen op indices (gold last).
+    thresholds: dict (li, i) -> (thr_hi, thr_lo)."""
+    stages = []
+    for li, p in enumerate(profiles):
+        n_ops = p.scores.shape[0]
+        for stage_no, i in enumerate(selections[li]):
+            hi, lo = thresholds.get((li, i), (0.0, 0.0))
+            stages.append(PhysicalPlanStage(
+                logical_idx=li, stage=stage_no, op_name=p.op_names[i],
+                thr_hi=hi, thr_lo=lo, is_map=p.is_map,
+                is_gold=(i == n_ops - 1), cost=float(p.costs[i])))
+    return PhysicalPlan(stages=stages, relational=[], est_cost=est_cost,
+                        recall_bound=bounds[0], precision_bound=bounds[1],
+                        feasible=feasible, planning_time_s=t_plan)
+
+
+# ---------------------------------------------------------------------------
+# Lotus / SupG
+# ---------------------------------------------------------------------------
+
+def plan_lotus(query: Query, items, registry, sample_frac: float = 0.15,
+               seed: int = 0, small_index: int = -2) -> PhysicalPlan:
+    """Two-stage cascades (small uncompressed -> gold) with per-operator
+    targets T^(1/m) and SupG-style threshold selection."""
+    t0 = time.perf_counter()
+    query = pull_up_semantic(query)
+    profiles, sample_idx = profile_query(query, items, registry,
+                                         sample_frac, seed)
+    m = max(len(profiles), 1)
+    t_rec = query.target_recall ** (1.0 / m)
+    t_prec = query.target_precision ** (1.0 / m)
+
+    selections, thresholds = [], {}
+    for li, p in enumerate(profiles):
+        n_ops = p.scores.shape[0]
+        # "small model" = uncompressed small LLM: by convention the highest
+        # -cost sm op; callers pass registries where that op exists.
+        small = n_ops + small_index if small_index < 0 else small_index
+        small = max(0, min(small, n_ops - 2))
+        gold_i = n_ops - 1
+        s_small = p.scores[small]
+        if p.is_map:
+            corr = p.correct[small]
+            # threshold on confidence: commit only above thr; choose the
+            # smallest thr whose committed accuracy has lb >= t_rec
+            cand = np.quantile(s_small, np.linspace(0.0, 0.95, 24))
+            thr = float("inf")
+            for t in cand:
+                mask = s_small > t
+                if mask.sum() == 0:
+                    continue
+                acc = corr[mask].mean()
+                if _normal_lower(acc, int(mask.sum())) >= min(t_rec, t_prec):
+                    thr = float(t)
+                    break
+            thresholds[(li, small)] = (thr, -np.inf)
+        else:
+            gold_acc = p.scores[gold_i] > 0
+            pos = gold_acc
+            cand = np.quantile(s_small, np.linspace(0.02, 0.98, 33))
+            # accept-threshold: precision of {s > hi} >= t_prec
+            hi = float("inf")
+            for t in cand[::-1]:
+                mask = s_small > t
+                if mask.sum() < 3:
+                    continue
+                prec = pos[mask].mean()
+                if _normal_lower(prec, int(mask.sum())) >= t_prec:
+                    hi = float(t)
+            # reject-threshold: recall of kept positives >= t_rec
+            lo = -float("inf")
+            for t in cand:
+                kept = s_small >= t
+                if pos.sum() == 0:
+                    break
+                rec = (kept & pos).sum() / max(pos.sum(), 1)
+                if _normal_lower(rec, int(pos.sum())) >= t_rec:
+                    lo = float(t)
+                else:
+                    break
+            thresholds[(li, small)] = (hi, lo)
+        selections.append([small, gold_i])
+
+    return _plan_from_selection(
+        profiles, selections, thresholds, len(items),
+        bounds=(t_rec ** m, t_prec ** m), feasible=True,
+        t_plan=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Abacus Pareto-Cascades
+# ---------------------------------------------------------------------------
+
+DEFAULT_LLM_THR = (1.5, -1.5)
+DEFAULT_MAP_THR = (1.0, -np.inf)
+
+
+def plan_pareto_cascades(query: Query, items, registry,
+                         sample_frac: float = 0.15, seed: int = 0,
+                         max_stages: int = 2) -> PhysicalPlan:
+    """Enumerate per-operator cascade configurations (fixed default
+    thresholds — the method cannot tune continuous parameters), simulate on
+    the sample, keep the Pareto frontier, pick the cheapest configuration
+    that meets the targets on the sample. No statistical guarantee."""
+    t0 = time.perf_counter()
+    query = pull_up_semantic(query)
+    profiles, sample_idx = profile_query(query, items, registry,
+                                         sample_frac, seed)
+    g = jnp.asarray(_gold_membership(profiles))
+    pipelines = _pipelines_data(profiles)
+
+    per_op_choices = []
+    for p in profiles:
+        n_ops = p.scores.shape[0]
+        non_gold = list(range(n_ops - 1))
+        choices = [()]
+        choices += [(i,) for i in non_gold]
+        choices += list(itertools.combinations(non_gold, 2))[:12]
+        per_op_choices.append(choices[:16])
+
+    def params_for(config) -> List[R.PipelineParams]:
+        out = []
+        for p, chosen in zip(profiles, config):
+            n_ops = p.scores.shape[0]
+            picks = np.full(n_ops, -10.0, np.float32)
+            picks[-1] = 10.0
+            hi = np.zeros(n_ops, np.float32)
+            lo = np.zeros(n_ops, np.float32)
+            for i in chosen:
+                picks[i] = 10.0
+                d = DEFAULT_MAP_THR if p.is_map else DEFAULT_LLM_THR
+                hi[i], lo[i] = d
+            out.append(R.PipelineParams(jnp.asarray(picks), jnp.asarray(hi),
+                                        jnp.asarray(lo)))
+        return out
+
+    rng = np.random.default_rng(seed)
+    all_configs = list(itertools.product(*per_op_choices))
+    if len(all_configs) > 400:
+        idx = rng.choice(len(all_configs), 400, replace=False)
+        all_configs = [all_configs[i] for i in idx]
+
+    # one jitted, vmapped evaluation over every candidate configuration
+    stacked = [params_for(c) for c in all_configs]
+    batched = [R.PipelineParams(
+        jnp.stack([s[li].pick_logits for s in stacked]),
+        jnp.stack([s[li].thr_hi for s in stacked]),
+        jnp.stack([s[li].thr_lo for s in stacked]))
+        for li in range(len(profiles))]
+
+    @jax.jit
+    def eval_all(*plists):
+        def one(*plist):
+            c = R.query_counts(pipelines, list(plist), g, 0.0, hard=True)
+            return c.tp, c.fp, c.fn, c.cost
+        return jax.vmap(one)(*plists)
+
+    tp, fp, fn, cost = (np.asarray(x) for x in eval_all(*batched))
+    prec_all = tp / np.maximum(tp + fp, 1e-9)
+    rec_all = tp / np.maximum(tp + fn, 1e-9)
+    ok = (rec_all >= query.target_recall) & \
+         (prec_all >= query.target_precision)
+    best = None
+    if ok.any():
+        i = int(np.argmin(np.where(ok, cost, np.inf)))
+        best = (all_configs[i], float(cost[i]), float(rec_all[i]),
+                float(prec_all[i]))
+    if best is None:
+        best = (tuple(() for _ in profiles), 0.0, 1.0, 1.0)
+
+    config, cost, rec, prec = best
+    selections, thresholds = [], {}
+    for li, (p, chosen) in enumerate(zip(profiles, config)):
+        n_ops = p.scores.shape[0]
+        sel = sorted(chosen) + [n_ops - 1]
+        selections.append(sel)
+        for i in chosen:
+            d = DEFAULT_MAP_THR if p.is_map else DEFAULT_LLM_THR
+            thresholds[(li, i)] = d
+    return _plan_from_selection(profiles, selections, thresholds, len(items),
+                                bounds=(rec, prec), feasible=True,
+                                est_cost=cost,
+                                t_plan=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Exp 3 ablations
+# ---------------------------------------------------------------------------
+
+def plan_stretto_local(query: Query, items, registry,
+                       cfg: PlannerConfig = PlannerConfig(),
+                       sample_frac: float = 0.15, seed: int = 0
+                       ) -> PhysicalPlan:
+    """Gradient optimizer per logical operator with evenly split targets."""
+    t0 = time.perf_counter()
+    query = pull_up_semantic(query)
+    profiles, _ = profile_query(query, items, registry, sample_frac, seed)
+    m = max(len(profiles), 1)
+    t_rec = query.target_recall ** (1.0 / m)
+    t_prec = query.target_precision ** (1.0 / m)
+
+    selections, thresholds = [], {}
+    tot_cost, rb, pb = 0.0, 1.0, 1.0
+    feas = True
+    for li, p in enumerate(profiles):
+        data = _pipelines_data([p])[0]
+        g_local = ((p.scores[-1] > 0).astype(np.float32)
+                   if not p.is_map else np.ones(p.scores.shape[1],
+                                                np.float32))
+        plan = optimize_query([data], g_local, t_rec, t_prec, cfg)
+        sel = [i for i in range(p.scores.shape[0]) if plan.selected[0][i]]
+        selections.append(sel)
+        for i in sel[:-1]:
+            thresholds[(li, i)] = (float(plan.params[0].thr_hi[i]),
+                                   float(plan.params[0].thr_lo[i]))
+        tot_cost += plan.est_cost
+        rb *= plan.recall_bound
+        pb *= plan.precision_bound
+        feas &= plan.feasible
+    return _plan_from_selection(profiles, selections, thresholds, len(items),
+                                bounds=(rb, pb), feasible=feas,
+                                est_cost=tot_cost,
+                                t_plan=time.perf_counter() - t0)
+
+
+def plan_stretto_independent(query: Query, items, registry,
+                             cfg: PlannerConfig = PlannerConfig(),
+                             sample_frac: float = 0.15, seed: int = 0
+                             ) -> PhysicalPlan:
+    """Joint gradient optimization, but the global bound is the product of
+    per-operator bounds at credibility alpha^(1/m) (independence)."""
+    from repro.core.optimizer import _flatten_params
+    t0 = time.perf_counter()
+    query = pull_up_semantic(query)
+    profiles, _ = profile_query(query, items, registry, sample_frac, seed)
+    pipelines = _pipelines_data(profiles)
+    m = max(len(profiles), 1)
+    alpha = cfg.credibility ** (1.0 / m)
+    sizes = [p.scores.shape[0] for p in profiles]
+    gs = [(p.scores[-1] > 0).astype(np.float32) if not p.is_map
+          else np.ones(p.scores.shape[1], np.float32) for p in profiles]
+    N = gs[0].shape[0]
+    max_cost = sum(float(jnp.sum(p.costs)) for p in pipelines) * N
+
+    def loss_fn(flat, tau):
+        plist = _unflatten_params(flat, sizes)
+        rb, pb = 1.0, 1.0
+        cost = 0.0
+        for data, params, g in zip(pipelines, plist, gs):
+            accept, c, decided = R.simulate_pipeline(params, data, tau,
+                                                     pick_tau=cfg.pick_tau)
+            if data.is_map:
+                pc = R.pipeline_value_correct(decided, data.correct)
+                tp = jnp.sum(pc)
+                fn = jnp.sum(1.0 - pc)
+                fp = fn
+            else:
+                gj = jnp.asarray(g)
+                tp = jnp.sum(accept * gj)
+                fp = jnp.sum(accept * (1 - gj))
+                fn = jnp.sum((1 - accept) * gj)
+            rb = rb * B.recall_lower_bound(tp, fn, alpha)
+            pb = pb * B.precision_lower_bound(tp, fp, alpha)
+            cost = cost + jnp.sum(c)
+        pen = (jax.nn.relu(query.target_recall + cfg.margin - rb)
+               + jax.nn.relu(query.target_precision + cfg.margin - pb))
+        return cost / max_cost + cfg.beta * pen, (rb, pb, cost)
+
+    flat = _flatten_params([init_pipeline_params(p, 2.0, 0.5)
+                            for p in pipelines])
+    mm = jnp.zeros_like(flat)
+    vv = jnp.zeros_like(flat)
+    decay = (cfg.tau_end / cfg.tau_start) ** (1.0 / max(cfg.steps - 1, 1))
+
+    @jax.jit
+    def step(state, i):
+        flat, mm, vv = state
+        tau = cfg.tau_start * decay ** i
+        (_, aux), gr = jax.value_and_grad(loss_fn, has_aux=True)(flat, tau)
+        mm = 0.9 * mm + 0.1 * gr
+        vv = 0.999 * vv + 0.001 * jnp.square(gr)
+        t = i.astype(jnp.float32) + 1
+        flat = flat - cfg.lr * (mm / (1 - 0.9 ** t)) / (
+            jnp.sqrt(vv / (1 - 0.999 ** t)) + 1e-8)
+        return (flat, mm, vv), aux
+
+    (flat, _, _), _ = jax.lax.scan(step, (flat, mm, vv),
+                                   jnp.arange(cfg.steps))
+    _, (rb, pb, cost) = loss_fn(flat, 0.0)
+    plist = _unflatten_params(flat, sizes)
+    selections, thresholds = [], {}
+    for li, (p, params) in enumerate(zip(profiles, plist)):
+        n_ops = p.scores.shape[0]
+        mask = np.array(jax.nn.sigmoid(params.pick_logits) > 0.5)
+        mask[-1] = True
+        sel = [i for i in range(n_ops) if mask[i]]
+        selections.append(sel)
+        for i in sel[:-1]:
+            thresholds[(li, i)] = (float(params.thr_hi[i]),
+                                   float(params.thr_lo[i]))
+    return _plan_from_selection(
+        profiles, selections, thresholds, len(items),
+        bounds=(float(rb), float(pb)),
+        feasible=bool(rb >= query.target_recall
+                      and pb >= query.target_precision),
+        est_cost=float(cost), t_plan=time.perf_counter() - t0)

@@ -1,0 +1,89 @@
+"""Bayesian credible lower bounds on precision/recall (paper §3.1, Eq. 8-9).
+
+Recall_D | sample  ~  Beta(1 + TP, 1 + FN)      (uninformative Beta(1,1) prior)
+lower bound  l_a   =  quantile(1 - a)  of that posterior
+                   =  betaincinv(1 + TP, 1 + FN, 1 - a)
+
+The paper optimizes *against* these bounds with gradient descent, so the
+inverse regularized incomplete beta function must be differentiable in
+(a, b) = (1+TP, 1+FN). scipy is not available; we implement betaincinv by
+bisection (values) and attach gradients via the implicit function theorem:
+
+    I(x; a, b) = q                      (q fixed)
+    dx/da = -(dI/da) / pdf(x; a, b)     dI/da by central differences
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import betainc, betaln
+
+
+def _beta_logpdf(x, a, b):
+    return ((a - 1.0) * jnp.log(x) + (b - 1.0) * jnp.log1p(-x)
+            - betaln(a, b))
+
+
+def _betaincinv_bisect(a, b, q, iters: int = 60):
+    lo = jnp.zeros_like(q)
+    hi = jnp.ones_like(q)
+
+    def body(i, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        below = betainc(a, b, mid) < q
+        lo = jnp.where(below, mid, lo)
+        hi = jnp.where(below, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+@jax.custom_vjp
+def betaincinv(a, b, q):
+    """x such that I(x; a, b) = q. Differentiable in a, b (and q)."""
+    return _betaincinv_bisect(a, b, q)
+
+
+def _fwd(a, b, q):
+    x = _betaincinv_bisect(a, b, q)
+    return x, (a, b, q, x)
+
+
+def _bwd(res, g):
+    a, b, q, x = res
+    x = jnp.clip(x, 1e-12, 1.0 - 1e-12)
+    pdf = jnp.exp(_beta_logpdf(x, a, b))
+    pdf = jnp.maximum(pdf, 1e-30)
+    # central differences for dI/da, dI/db (no closed form)
+    ha = 1e-4 * jnp.maximum(a, 1.0)
+    hb = 1e-4 * jnp.maximum(b, 1.0)
+    dIda = (betainc(a + ha, b, x) - betainc(a - ha, b, x)) / (2 * ha)
+    dIdb = (betainc(a, b + hb, x) - betainc(a, b - hb, x)) / (2 * hb)
+    dxda = -dIda / pdf
+    dxdb = -dIdb / pdf
+    dxdq = 1.0 / pdf
+    return (g * dxda, g * dxdb, g * dxdq)
+
+
+betaincinv.defvjp(_fwd, _bwd)
+
+
+def beta_lower_bound(successes, failures, credibility: float = 0.95):
+    """l such that P(rate >= l | successes, failures) = credibility.
+
+    Differentiable in (successes, failures) — soft counts welcome.
+    """
+    a = jnp.asarray(1.0 + successes, jnp.float32)
+    b = jnp.asarray(1.0 + failures, jnp.float32)
+    q = jnp.asarray(1.0 - credibility, jnp.float32)
+    return betaincinv(a, b, q)
+
+
+def recall_lower_bound(tp, fn, credibility: float = 0.95):
+    return beta_lower_bound(tp, fn, credibility)
+
+
+def precision_lower_bound(tp, fp, credibility: float = 0.95):
+    return beta_lower_bound(tp, fp, credibility)

@@ -1,0 +1,84 @@
+"""Logical plans: relational + semantic operators over a multimodal corpus.
+
+Mirrors the paper's execution model: a DAG (here: a pipeline, which is what
+the optimizer operates on after pull-up) of relational operators and
+semantic operators (filters / maps) with natural-language parameters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class SemFilter:
+    """LLM-powered predicate over an item's unstructured payload."""
+    text: str                     # natural-language predicate
+    task_id: int                  # dataset task the predicate evaluates
+    modality: str = "text"        # text | image
+
+
+@dataclass(frozen=True)
+class SemMap:
+    """LLM-powered extraction producing a new column."""
+    text: str
+    task_id: int
+    out_column: str = "extracted"
+    modality: str = "text"
+
+
+@dataclass(frozen=True)
+class RelFilter:
+    """Classical relational predicate over structured columns (cheap)."""
+    column: str
+    op: str                       # == | != | < | > | in
+    value: Any
+
+    def apply(self, row: Dict[str, Any]) -> bool:
+        v = row.get(self.column)
+        if self.op == "==":
+            return v == self.value
+        if self.op == "!=":
+            return v != self.value
+        if self.op == "<":
+            return v < self.value
+        if self.op == ">":
+            return v > self.value
+        if self.op == "in":
+            return v in self.value
+        raise ValueError(self.op)
+
+
+SemanticOp = Any   # SemFilter | SemMap
+PlanNode = Any     # SemanticOp | RelFilter
+
+
+@dataclass
+class Query:
+    nodes: List[PlanNode]
+    target_recall: float = 0.9
+    target_precision: float = 0.9
+
+    @property
+    def semantic_ops(self) -> List[SemanticOp]:
+        return [n for n in self.nodes
+                if isinstance(n, (SemFilter, SemMap))]
+
+    @property
+    def relational_ops(self) -> List[RelFilter]:
+        return [n for n in self.nodes if isinstance(n, RelFilter)]
+
+
+def pull_up_semantic(query: Query) -> Query:
+    """Step 1 of optimization: execute relational operators first so that
+    LLM-powered operators see fewer tuples (paper Fig. 2, step 1).
+
+    For a pipeline of commuting filters this is exact; maps produce new
+    columns that relational filters here never reference (enforced by
+    construction of our workloads), so the pull-up is always legal.
+    """
+    rel = [n for n in query.nodes if isinstance(n, RelFilter)]
+    sem = [n for n in query.nodes if not isinstance(n, RelFilter)]
+    return Query(nodes=rel + sem,
+                 target_recall=query.target_recall,
+                 target_precision=query.target_precision)

@@ -1,0 +1,94 @@
+"""Physical operator interface + plan representation.
+
+A physical operator evaluates one semantic operator over a batch of corpus
+items and returns raw decision scores (filters: log-odds; maps: values +
+confidences). Implementations:
+
+  repro.serving.operators.KVCacheLLMOperator   — the paper's contribution:
+      batched forward over precomputed (compressed) KV caches, prefill
+      skipped; one profile per (model, compression ratio)
+  repro.serving.operators.EmbeddingFilterOperator — cosine-similarity filter
+  repro.serving.operators.PythonMapOperator       — generated-code extractor
+
+Costs are measured during profiling (wall-clock per tuple), exactly as the
+paper's Step 2 does.
+"""
+from __future__ import annotations
+
+import abc
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class PhysicalOperator(abc.ABC):
+    """One physical implementation of a semantic operator."""
+
+    name: str
+    is_gold: bool = False
+
+    @abc.abstractmethod
+    def run_filter(self, items: Sequence[Any], op) -> np.ndarray:
+        """Return log-odds scores (N,) for a SemFilter."""
+
+    def run_map(self, items: Sequence[Any], op
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Return (values (N,), confidences (N,)) for a SemMap."""
+        raise NotImplementedError
+
+    def cost_model(self) -> float:
+        """Static per-tuple cost estimate (seconds); refined by profiling."""
+        return 1.0
+
+
+@dataclass
+class ProfiledPipeline:
+    """Profiling result for one logical operator (paper Step 2)."""
+    logical_idx: int
+    is_map: bool
+    op_names: List[str]
+    scores: np.ndarray            # (n_ops, N_sample)
+    costs: np.ndarray             # (n_ops,) measured per-tuple seconds
+    values: Optional[np.ndarray] = None     # (n_ops, N) map outputs
+    correct: Optional[np.ndarray] = None    # (n_ops, N) value == gold value
+
+
+@dataclass
+class PhysicalPlanStage:
+    logical_idx: int
+    stage: int                    # position within the cascade
+    op_name: str
+    thr_hi: float
+    thr_lo: float
+    is_map: bool
+    is_gold: bool
+    cost: float                   # profiled per-tuple cost
+    sel_inter: float = 1.0
+    sel_intra: float = 1.0
+
+
+@dataclass
+class PhysicalPlan:
+    stages: List[PhysicalPlanStage]      # in execution order
+    relational: List[Any]                # RelFilter list (executed first)
+    est_cost: float
+    recall_bound: float
+    precision_bound: float
+    feasible: bool
+    planning_time_s: float = 0.0
+
+    def describe(self) -> str:
+        lines = [f"PhysicalPlan(est_cost={self.est_cost:.2f}s, "
+                 f"R>={self.recall_bound:.3f}, P>={self.precision_bound:.3f},"
+                 f" feasible={self.feasible})"]
+        for r in self.relational:
+            lines.append(f"  rel: {r}")
+        for s in self.stages:
+            tag = " [gold]" if s.is_gold else ""
+            lines.append(
+                f"  L{s.logical_idx}/s{s.stage} {s.op_name}{tag} "
+                f"thr=({s.thr_lo:+.2f},{s.thr_hi:+.2f}) "
+                f"cost={s.cost * 1e3:.2f}ms/t")
+        return "\n".join(lines)

@@ -1,0 +1,66 @@
+"""Profiling of semantic operators on a data sample (paper Fig. 2, step 2).
+
+Runs every available physical operator on an i.i.d. sample, records raw
+outputs (log-odds / values) and measured per-tuple cost. Storing outputs
+lets the planner simulate any search-space configuration without further
+LLM calls — exactly the paper's approach.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.logical import Query, SemFilter, SemMap
+from repro.core.physical import PhysicalOperator, ProfiledPipeline
+
+
+def profile_query(query: Query, items: Sequence[Any],
+                  registry, sample_frac: float = 0.15,
+                  seed: int = 0, min_sample: int = 20):
+    """Returns (profiles: list[ProfiledPipeline], sample_idx).
+
+    registry: callable (semantic_op) -> list[PhysicalOperator], sorted by
+    cost_model(), gold LAST.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(items)
+    k = max(min_sample, int(round(sample_frac * n)))
+    k = min(k, n)
+    sample_idx = np.sort(rng.choice(n, size=k, replace=False))
+    sample = [items[i] for i in sample_idx]
+
+    profiles: List[ProfiledPipeline] = []
+    for li, op in enumerate(query.semantic_ops):
+        ops = registry(op)
+        assert ops[-1].is_gold, "gold operator must be last in the registry"
+        scores, costs = [], []
+        values, correct = [], []
+        for phys in ops:
+            t0 = time.perf_counter()
+            if isinstance(op, SemFilter):
+                s = np.asarray(phys.run_filter(sample, op), np.float32)
+                v = None
+            else:
+                v, conf = phys.run_map(sample, op)
+                v = np.asarray(v)
+                s = np.asarray(conf, np.float32)
+            dt = (time.perf_counter() - t0) / max(len(sample), 1)
+            scores.append(s)
+            costs.append(max(dt, 1e-9))
+            if v is not None:
+                values.append(v)
+        is_map = isinstance(op, SemMap)
+        prof = ProfiledPipeline(
+            logical_idx=li, is_map=is_map,
+            op_names=[p.name for p in ops],
+            scores=np.stack(scores),
+            costs=np.asarray(costs, np.float32),
+        )
+        if is_map:
+            vals = np.stack(values)
+            prof.values = vals
+            prof.correct = (vals == vals[-1][None, :]).astype(np.float32)
+        profiles.append(prof)
+    return profiles, sample_idx

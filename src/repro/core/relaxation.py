@@ -1,0 +1,175 @@
+"""Continuous relaxation of cascade plans (paper §4.1, Eq. 1-7 & 16).
+
+Everything here is a differentiable jnp program over the *profiled sample*:
+given per-(operator, tuple) raw scores, pick logits and thresholds, simulate
+the soft cascade and produce soft TP/FP/FN and expected cost. The planner
+differentiates through this (and through the Beta credible bounds) with Adam.
+
+Conventions
+-----------
+A *logical* operator is implemented by a pipeline (cascade) of physical
+operators sorted by cost; the LAST one is the gold operator: always selected,
+never unsure.
+
+Per logical op j we have arrays over its pipeline of n_j physical ops:
+  scores   (n_j, N)  raw decision scores on the sample (log-odds / cosine)
+  gold_dec (n_j, N)  hard accept decision of each op at tau->0 given theta
+  costs    (n_j,)    per-tuple cost seconds
+and trainable params:
+  pick_logits (n_j,)       sigma_i = sigmoid(pick/tau)
+  thr_hi, thr_lo (n_j,)    accept if score > thr_hi, reject if < thr_lo
+
+For maps, scores are *confidences* and correctness (n_j, N) in {0,1} says
+whether op i's output value equals the gold op's value for tuple t; the
+reject branch is disabled (a map commits or defers).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PipelineParams(NamedTuple):
+    pick_logits: jax.Array   # (n,)
+    thr_hi: jax.Array        # (n,)
+    thr_lo: jax.Array        # (n,)
+
+
+class PipelineData(NamedTuple):
+    scores: jax.Array        # (n, N) raw scores per op per sample tuple
+    costs: jax.Array         # (n,) per-tuple cost (seconds)
+    is_map: bool             # map pipelines have no reject branch
+    correct: Optional[jax.Array] = None   # (n, N) for maps: value == gold
+
+
+def soft_decisions(scores, thr_hi, thr_lo, tau, is_map: bool):
+    """Eq. 16: softmax_tau([s - thr_hi, thr_lo - s, 0]) -> (acc, rej, uns)."""
+    z_acc = scores - thr_hi[:, None]
+    z_rej = thr_lo[:, None] - scores
+    z_uns = jnp.zeros_like(z_acc)
+    if is_map:
+        z_rej = jnp.full_like(z_rej, -1e9)
+    z = jnp.stack([z_acc, z_rej, z_uns], axis=0) / jnp.maximum(tau, 1e-6)
+    p = jax.nn.softmax(z, axis=0)
+    return p[0], p[1], p[2]
+
+
+def hard_decisions(scores, thr_hi, thr_lo, is_map: bool):
+    """tau -> 0 limit of soft_decisions: argmax of the three logits.
+
+    (NOT simply `score > thr_hi`: the learned thresholds may cross, and the
+    softmax limit is the argmax — keeping hard and soft semantics identical
+    removes the extraction gap.)
+    """
+    z_acc = scores - thr_hi[:, None]
+    z_rej = thr_lo[:, None] - scores
+    if is_map:
+        z_rej = jnp.full_like(z_rej, -jnp.inf)
+    acc = (z_acc > 0) & (z_acc >= z_rej)
+    rej = (z_rej > 0) & (z_rej > z_acc)
+    uns = ~(acc | rej)
+    return acc, rej, uns
+
+
+def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,
+                      hard: bool = False, pick_tau=None):
+    """Soft cascade (Eq. 1-3) for one logical operator.
+
+    Returns (p_accept (N,), expected_cost (N,), p_chosen (n, N)).
+    p_chosen[i, t] = probability tuple t is *decided* by op i (its accept or
+    reject fires) — used by maps to weight value correctness.
+    """
+    n, N = data.scores.shape
+    if hard:
+        sigma = (jax.nn.sigmoid(params.pick_logits) > 0.5).astype(jnp.float32)
+        acc_i, rej_i, uns_i = hard_decisions(
+            data.scores, params.thr_hi, params.thr_lo, data.is_map)
+        acc_i = acc_i.astype(jnp.float32)
+        rej_i = rej_i.astype(jnp.float32)
+        uns_i = uns_i.astype(jnp.float32)
+    else:
+        pt = tau if pick_tau is None else pick_tau
+        sigma = jax.nn.sigmoid(params.pick_logits / jnp.maximum(pt, 1e-6))
+        acc_i, rej_i, uns_i = soft_decisions(
+            data.scores, params.thr_hi, params.thr_lo, tau, data.is_map)
+    # gold (last) op: always selected, never unsure, decides at its natural
+    # boundary (log-odds 0) — it defines the reference, so no learned
+    # thresholds apply to it. Maps always commit.
+    sigma = sigma.at[-1].set(1.0)
+    if data.is_map:
+        gold_acc = jnp.ones_like(acc_i[-1])
+    elif hard:
+        gold_acc = (data.scores[-1] > 0.0).astype(jnp.float32)
+    else:
+        gold_acc = jax.nn.sigmoid(data.scores[-1] / jnp.maximum(tau, 1e-6))
+    acc_i = acc_i.at[-1].set(gold_acc)
+    rej_i = rej_i.at[-1].set(1.0 - gold_acc)
+    uns_i = uns_i.at[-1].set(0.0)
+
+    def step(carry, xs):
+        accept, reject, unsure, cost = carry
+        s, a_i, r_i, c_i = xs
+        cost = cost + unsure * s * c_i                    # Eq. 4 (w/ sigma)
+        new_accept = accept + unsure * s * a_i            # Eq. 1
+        new_reject = reject + unsure * s * r_i            # Eq. 2
+        new_unsure = 1.0 - new_accept - new_reject        # Eq. 3
+        decided_here = unsure * s * (a_i + r_i)
+        return (new_accept, new_reject, new_unsure, cost), decided_here
+
+    init = (jnp.zeros(N), jnp.zeros(N), jnp.ones(N), jnp.zeros(N))
+    (accept, reject, unsure, cost), decided = jax.lax.scan(
+        step, init, (sigma, acc_i, rej_i, data.costs))
+    # numerical guard: any residual unsure mass goes to reject
+    accept = jnp.clip(accept, 0.0, 1.0)
+    return accept, cost, decided
+
+
+def pipeline_value_correct(decided: jax.Array, correct: jax.Array):
+    """Maps: P(value correct) = sum_i P(decided by i) * correct_i."""
+    total = jnp.maximum(decided.sum(0), 1e-9)
+    return (decided * correct).sum(0) / total * jnp.clip(decided.sum(0), 0, 1)
+
+
+class QueryCounts(NamedTuple):
+    tp: jax.Array
+    fp: jax.Array
+    fn: jax.Array
+    cost: jax.Array          # total expected cost over sample (seconds)
+
+
+def query_counts(pipelines, params_list, gold_membership, tau,
+                 hard: bool = False, pick_tau=None) -> QueryCounts:
+    """Global soft TP/FP/FN over a query with several logical operators.
+
+    pipelines: list[PipelineData]; params_list: list[PipelineParams]
+    gold_membership: (N,) {0,1} — tuple in the gold plan's result set
+    (all gold filters accept AND all gold map values correct, i.e. 1 by
+    construction for maps vs themselves).
+
+    TP_t = prod_j p_agree_j(t) * g_t ; FP_t = p_in_o(t) - TP_t ;
+    FN_t = g_t - TP_t (paper §4.2 — no independence assumption: the product
+    is per-tuple over the *same* sample, capturing correlations).
+    """
+    N = gold_membership.shape[0]
+    p_in = jnp.ones(N)
+    p_good = jnp.ones(N)
+    total_cost = jnp.zeros(N)
+    survive = jnp.ones(N)    # tuples reaching this pipeline (plan order)
+    for data, params in zip(pipelines, params_list):
+        accept, cost, decided = simulate_pipeline(params, data, tau, hard,
+                                                  pick_tau)
+        total_cost = total_cost + survive * cost
+        if data.is_map:
+            p_corr = pipeline_value_correct(decided, data.correct)
+            p_good = p_good * p_corr
+        else:
+            p_in = p_in * accept
+            p_good = p_good * accept
+            survive = survive * accept
+    g = gold_membership.astype(jnp.float32)
+    tp = jnp.sum(p_good * g)
+    fp = jnp.sum(jnp.maximum(p_in - p_good * g, 0.0))
+    fn = jnp.sum(jnp.maximum(g - p_good * g, 0.0))
+    return QueryCounts(tp, fp, fn, jnp.sum(total_cost))

@@ -1,0 +1,108 @@
+"""Logical-axis sharding rules.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", ...). A ``Rules`` mapping resolves logical names to mesh axes at jit
+time. When no rules are active (single-device smoke tests), all constraints
+are no-ops — the same model code runs everywhere.
+
+Mesh layout (production):
+    single-pod: (data=16, model=16)
+    multi-pod:  (pod=2, data=16, model=16)
+
+Parallelism mapping:
+    DP   : batch            -> ("pod", "data")
+    TP   : heads / ff / vocab -> "model"
+    EP   : expert           -> "model"
+    FSDP : embed (param d_model rows of big matrices) -> "data"  (optional)
+    SP   : cache_seq        -> "data" for long-context decode (batch=1)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# logical axis -> mesh axes
+DEFAULT_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,          # d_model dim of activations (replicated)
+    "vocab": "model",
+    "heads": "model",       # fused head*d_head projection columns
+    "kv_heads": "model",    # KV-head dim of decode caches
+    "ff": "model",
+    "expert": "model",
+    "ffe": None,            # per-expert FFN width; "model" under 2D EP
+    "kv_lora": None,
+    "cache_seq": None,      # set to "data" for long_500k SP decode
+    "cache_batch": ("pod", "data"),
+    "layers": None,
+    "fsdp": None,           # set to "data" to FSDP-shard big param rows
+    "opt_fsdp": "data",     # ZeRO-1: Adam moments sharded over data
+}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.rules: Optional[Dict[str, Axes]] = None
+        self.mesh_axes: Tuple[str, ...] = ()
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, Axes], mesh: "jax.sharding.Mesh"):
+    prev = (_STATE.rules, _STATE.mesh_axes)
+    _STATE.rules = rules
+    _STATE.mesh_axes = tuple(mesh.axis_names)
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh_axes = prev
+
+
+def make_rules(**overrides) -> Dict[str, Axes]:
+    r = dict(DEFAULT_RULES)
+    r.update(overrides)
+    return r
+
+
+def resolve(axes: Tuple[Optional[str], ...]) -> P:
+    """Logical axes tuple -> PartitionSpec under the active rules."""
+    rules, mesh_axes = _STATE.rules, _STATE.mesh_axes
+    assert rules is not None
+    out = []
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        if isinstance(m, tuple):
+            m = tuple(x for x in m if x in mesh_axes) or None
+            if m is not None and len(m) == 1:
+                m = m[0]
+        elif isinstance(m, str) and m not in mesh_axes:
+            m = None
+        out.append(m)
+    while out and out[-1] is None:   # trailing Nones are implicit
+        out.pop()
+    return P(*out)
+
+
+def sc(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """with_sharding_constraint on logical axes; no-op without active rules."""
+    if _STATE.rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, resolve(axes))
+
+
+def pspec_tree(axes_tree):
+    """Map a pytree whose leaves are logical-axes tuples to PartitionSpecs.
+    Requires active rules (call inside ``use_rules``)."""
+    return jax.tree.map(
+        lambda axes: resolve(axes), axes_tree,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(isinstance(x, (str, type(None))) for x in v))

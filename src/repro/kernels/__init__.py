@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  decode_attention   — flash-decode over padded variable-length compressed
+                       KV caches (bf16 + fused-dequant int8); the hot loop
+                       of Stretto's prefill-skip operators
+  prefill_attention  — causal/windowed flash attention (offline cache
+                       build + train/prefill TPU target)
+  expected_attention — query-agnostic Expected-Attention compression scores
+
+Each kernel ships with a pure-jnp oracle (ref.py) and a jit'd dispatch
+wrapper (ops.py); tests sweep shapes/dtypes in interpret mode.
+"""

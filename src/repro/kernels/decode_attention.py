@@ -1,0 +1,153 @@
+"""Pallas TPU flash-decode kernel over (compressed) KV caches.
+
+The hot loop of Stretto's KV-cache-enabled operators: one query token per
+item attends to a precomputed, possibly compressed, right-padded cache.
+
+  q        (B, KV, G, dk)    query heads, grouped GQA layout
+  k_cache  (B, S, KV, dk)
+  v_cache  (B, S, KV, dv)    dv may differ from dk (absorbed MLA: dv = r)
+  lengths  (B,) int32        valid prefix per item (compressed lengths)
+  window   int (static)      sliding-window size; GLOBAL = full
+
+Grid (B, KV, S/block_s): the KV-length axis iterates innermost and
+sequentially on TPU, so the online-softmax state (m, l, acc) lives in VMEM
+scratch across iterations — the TPU-idiomatic analogue of FlashDecoding's
+split-K scheme. K/V tiles stream HBM->VMEM via BlockSpec; the (G, dk) x
+(dk, block_s) score matmul and the (G, block_s) x (block_s, dv) accumulate
+run on the MXU with dk, dv in {64, 128, 256+} and block_s a multiple of 128.
+
+Per-item `lengths` masking makes padded batches exact — this is what lets
+the serving engine batch caches of different compressed lengths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, block_s: int, n_s: int,
+                   window: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, dk)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, dk)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, dv)
+    _decode_core(len_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                 block_s=block_s, n_s=n_s, window=window, s_idx=s_idx)
+
+
+def _decode_kernel_int8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *, block_s: int,
+                        n_s: int, window: int, scale: float):
+    """int8 KV variant: dequantization happens in-register after the VMEM
+    load, so HBM traffic is 1 byte/element + per-token scales (the
+    beyond-paper optimization measured in EXPERIMENTS §Perf)."""
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    ks = ks_ref[0, :, 0].astype(jnp.float32)             # (bs,)
+    vs = vs_ref[0, :, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks[:, None]
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs[:, None]
+    _decode_core(len_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                 block_s=block_s, n_s=n_s, window=window, s_idx=s_idx)
+
+
+def _decode_core(len_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                 block_s: int, n_s: int, window: int, s_idx):
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    length = len_ref[0]  # noqa: E741
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)
+    mask = (pos < length) & ((length - 1 - pos) < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # (G, bs)
+    alpha = jnp.exp(m_prev - m_new)                       # (G, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (G, dv)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, window: int = 1 << 30,
+                     block_s: int = 128, interpret: bool = False,
+                     k_scale: jax.Array = None, v_scale: jax.Array = None
+                     ) -> jax.Array:
+    """Flash-decode. Returns (B, KV, G, dv).
+
+    With k_scale/v_scale (B, S, KV) given, k_cache/v_cache are int8 and are
+    dequantized in-register (HBM streams 1 B/elem)."""
+    B, KV, G, dk = q.shape
+    _, S, _, dv = v_cache.shape
+    block_s = min(block_s, S)
+    if S % block_s:
+        raise ValueError(f"S={S} must be a multiple of block_s={block_s}")
+    n_s = S // block_s
+    scale = dk ** -0.5
+    quant = k_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, s: (b,)),
+        pl.BlockSpec((1, 1, G, dk), lambda b, h, s: (b, h, 0, 0)),
+        pl.BlockSpec((1, block_s, 1, dk), lambda b, h, s: (b, s, h, 0)),
+        pl.BlockSpec((1, block_s, 1, dv), lambda b, h, s: (b, s, h, 0)),
+    ]
+    args = [lengths, q, k_cache, v_cache]
+    if quant:
+        kern = functools.partial(_decode_kernel_int8, block_s=block_s,
+                                 n_s=n_s, window=window, scale=scale)
+        in_specs += [
+            pl.BlockSpec((1, block_s, 1), lambda b, h, s: (b, s, h)),
+            pl.BlockSpec((1, block_s, 1), lambda b, h, s: (b, s, h)),
+        ]
+        args += [k_scale, v_scale]
+        out_dtype = jnp.bfloat16
+    else:
+        kern = functools.partial(_decode_kernel, block_s=block_s, n_s=n_s,
+                                 window=window, scale=scale)
+        out_dtype = q.dtype
+    return pl.pallas_call(
+        kern,
+        grid=(B, KV, n_s),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, dv), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dv),
+                                       q.dtype if not quant else out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for Expected-Attention compression scores.
+
+Query-agnostic KV-cache compression (Devoto et al. 2025, used by Stretto §5):
+score each cached position by its expected attention weight under the
+model's *future-query distribution* q ~ N(mu_h, diag(sig2_h)):
+
+    E_q[exp(q . k / sqrt(d))] = exp(mu_h . k / sqrt(d)
+                                    + 0.5 * (k*k) . sig2_h / d)
+
+aggregated (mean) over the query heads h attached to the KV head. Offline,
+the top (1 - ratio) fraction of positions per item is kept.
+
+The kernel is two MXU matmuls per tile: K (bs, dk) x mu^T (dk, H) and
+K^2 (bs, dk) x sig2^T (dk, H), a log-domain add, and a mean over H.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ea_kernel(k_ref, mu_ref, sig2_ref, o_ref, *, scale: float):
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (bs, dk)
+    mu = mu_ref[0].astype(jnp.float32)                     # (G, dk)
+    sig2 = sig2_ref[0].astype(jnp.float32)                 # (G, dk)
+    lin = jax.lax.dot_general(k, mu, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    quad = jax.lax.dot_general(k * k, sig2, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    log_score = lin * scale + 0.5 * quad * (scale * scale)  # (bs, G)
+    o_ref[0, :, 0] = jnp.mean(log_score, axis=1)
+
+
+def expected_attention_scores(k_cache: jax.Array, mu: jax.Array,
+                              sig2: jax.Array, *, block_s: int = 256,
+                              interpret: bool = False) -> jax.Array:
+    """k_cache: (B, S, KV, dk); mu, sig2: (KV, G, dk) query-head stats.
+
+    Returns log-scores (B, S, KV) — higher means more worth keeping.
+    """
+    B, S, KV, dk = k_cache.shape
+    G = mu.shape[1]
+    block_s = min(block_s, S)
+    if S % block_s:
+        raise ValueError(f"S={S} not a multiple of block_s={block_s}")
+    scale = dk ** -0.5
+
+    kernel = functools.partial(_ea_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, S // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, 1, dk), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, G, dk), lambda b, h, s: (h, 0, 0)),
+            pl.BlockSpec((1, G, dk), lambda b, h, s: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, 1), lambda b, h, s: (b, s, h)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV), jnp.float32),
+        interpret=interpret,
+    )(k_cache, mu, sig2)

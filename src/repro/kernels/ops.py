@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode or fall back to
+the jnp oracle; on TPU the compiled Pallas path is used. `backend` can be
+forced for tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pl
+from repro.kernels.expected_attention import \
+    expected_attention_scores as _ea_pl
+from repro.kernels.prefill_attention import prefill_attention as _prefill_pl
+
+GLOBAL = 1 << 30
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = GLOBAL,
+                     backend: str = "auto"):
+    """backend: auto | pallas | interpret | ref"""
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.decode_attention_ref(q, k_cache, v_cache, lengths,
+                                        window=window)
+    interpret = (backend == "interpret") or not _on_tpu()
+    return _decode_pl(q, k_cache, v_cache, lengths, window=window,
+                      interpret=interpret)
+
+
+def prefill_attention(q, k, v, *, window: int = GLOBAL, causal: bool = True,
+                      backend: str = "auto"):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.prefill_attention_ref(q, k, v, window=window,
+                                         causal=causal)
+    interpret = (backend == "interpret") or not _on_tpu()
+    return _prefill_pl(q, k, v, window=window, causal=causal,
+                       interpret=interpret)
+
+
+def expected_attention_scores(k_cache, mu, sig2, *, backend: str = "auto"):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.expected_attention_scores_ref(k_cache, mu, sig2)
+    interpret = (backend == "interpret") or not _on_tpu()
+    return _ea_pl(k_cache, mu, sig2, interpret=interpret)

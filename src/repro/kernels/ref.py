@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GLOBAL = 1 << 30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *,
+                         window: int = GLOBAL):
+    """q: (B, KV, G, dk); k: (B, S, KV, dk); v: (B, S, KV, dv);
+    lengths: (B,). Returns (B, KV, G, dv)."""
+    B, KV, G, dk = q.shape
+    S = k_cache.shape[1]
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)[None, :]
+    mask = (pos < lengths[:, None]) & ((lengths - 1)[:, None] - pos < window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def prefill_attention_ref(q, k, v, *, window: int = GLOBAL,
+                          causal: bool = True):
+    """q: (B, S, KV, G, dk); k: (B, S, KV, dk); v: (B, S, KV, dv)."""
+    B, S, KV, G, dk = q.shape
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = (qpos - kpos) < window
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def expected_attention_scores_ref(k_cache, mu, sig2):
+    """k: (B, S, KV, dk); mu, sig2: (KV, G, dk) -> (B, S, KV) log-scores."""
+    dk = k_cache.shape[-1]
+    scale = dk ** -0.5
+    kf = k_cache.astype(jnp.float32)
+    lin = jnp.einsum("bshd,hgd->bshg", kf, mu.astype(jnp.float32))
+    quad = jnp.einsum("bshd,hgd->bshg", kf * kf, sig2.astype(jnp.float32))
+    return jnp.mean(lin * scale + 0.5 * quad * scale * scale, axis=-1)

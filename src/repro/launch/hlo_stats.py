@@ -1,0 +1,371 @@
+"""Loop-aware HLO accounting for the roofline analysis.
+
+``compiled.cost_analysis()`` visits a ``while`` body ONCE — it does not
+multiply by trip count (verified empirically; a 10-step scan of a 128^3
+matmul reports 1-iteration FLOPs). Our models scan over the layer stack, so
+all roofline terms must multiply loop bodies by their trip counts. This
+module parses ``compiled.as_text()`` (the SPMD-partitioned, per-device
+module) and computes, bottom-up over the call graph:
+
+  flops      — 2*M*N*K for every dot (+ convolutions), x enclosing trips
+  bytes      — per top-level (post-fusion) instruction: result bytes +
+               operand bytes (models one HBM write + one read)
+  coll_bytes — per collective: result bytes (all-reduce x2 for ring),
+               x enclosing trips
+
+Shapes in the partitioned module are per-device, so all three terms are
+per-device quantities — exactly what the roofline denominator wants.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f4e2m1fn": 1, "f8e8m0fnu": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+?)\s+([\w\-]+)\((.*)$")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ring all-reduce moves ~2x the buffer; others ~1x
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0,
+                "all-reduce-start": 2.0, "all-gather-start": 1.0,
+                "collective-permute-start": 1.0}
+
+_ZERO_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuple types."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    # scalar like "f32[]" -> regex gives dims ''
+    return total
+
+
+def shape_elems(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+@dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # computation header: "%name (args) -> type {" or "ENTRY %name ..."
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, type_str, opcode, rest = mi.groups()
+        # operands: %refs inside the first parenthesized group
+        depth, i, args = 1, 0, ""
+        while i < len(rest) and depth:
+            ch = rest[i]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+            i += 1
+        tail = rest[i:]
+        ins = Instr(name, type_str, opcode, tail,
+                    operands=_OPERAND_RE.findall(args))
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = math.prod(shape_elems(ins.type_str)) or 1
+    mc = _CONTRACT_RE.search(ins.rest)
+    contracted = 1
+    if mc and ins.operands:
+        lhs = comp.by_name.get(ins.operands[0])
+        if lhs is not None:
+            lhs_dims = shape_elems(lhs.type_str)
+            for d in (mc.group(1).split(",") if mc.group(1) else []):
+                di = int(d)
+                if di < len(lhs_dims):
+                    contracted *= lhs_dims[di]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    # output elems x 2 x (kernel spatial x in_channels): approximate via
+    # rhs (kernel) elems / out_channels
+    out = math.prod(shape_elems(ins.type_str)) or 1
+    if len(ins.operands) >= 2:
+        rhs = comp.by_name.get(ins.operands[1])
+        if rhs is not None:
+            kdims = shape_elems(rhs.type_str)
+            if kdims:
+                return 2.0 * out * math.prod(kdims[:-1])
+    return 2.0 * out
+
+
+def analyze(text: str, tpu_model: bool = True) -> Stats:
+    """Analyze a partitioned HLO module.
+
+    tpu_model=True applies three corrections for XLA:CPU artifacts that do
+    not exist on the TPU target (documented in EXPERIMENTS.md §Roofline):
+      1. ``copy`` ops / copy-rooted fusions are zero-traffic — on TPU the
+         donated cache and scan carries alias in place; XLA:CPU materializes
+         f32 upcast copies of every bf16 argument.
+      2. ``broadcast``-rooted fusions of scalars (loop output-buffer init)
+         are zero-traffic (aliased with donation).
+      3. ``dot`` traffic is counted at 2 bytes/element for f32 operands —
+         XLA:CPU upcasts bf16 matmuls to f32; on TPU the MXU reads bf16.
+    """
+    comps = parse_module(text)
+    # constants: re-parse raw text for s32[] constants per computation
+    const_vals: Dict[str, List[int]] = {}
+    cur_name = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+            cur_name = m.group(1) if m else None
+            continue
+        if s == "}":
+            cur_name = None
+            continue
+        if cur_name:
+            m = re.search(r"=\s*s32\[\]\s*constant\((\d+)\)", s)
+            if m:
+                const_vals.setdefault(cur_name, []).append(int(m.group(1)))
+
+    memo: Dict[str, Stats] = {}
+
+    def comp_root_opcode(name: str) -> str:
+        comp = comps.get(name)
+        if comp is None or not comp.instrs:
+            return ""
+        return comp.instrs[-1].opcode
+
+    def nonscalar_operand_bytes(ins: Instr, comp: Computation):
+        vals = []
+        for op in ins.operands:
+            src = comp.by_name.get(op)
+            if src is not None:
+                b = shape_bytes(src.type_str)
+                if b > 64:
+                    vals.append(b)
+        return vals
+
+    def comp_stats(name: str) -> Stats:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        st = Stats()
+        memo[name] = st
+        if comp is None:
+            return st
+        for ins in comp.instrs:
+            opc = ins.opcode
+            if opc == "dot":
+                st.flops += _dot_flops(ins, comp)
+            elif opc == "convolution":
+                st.flops += _conv_flops(ins, comp)
+            elif opc == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                trips = 1
+                if mcnd and mcnd.group(1) in const_vals:
+                    trips = max(const_vals[mcnd.group(1)] + [1])
+                if mb:
+                    st.add(comp_stats(mb.group(1)), trips)
+                continue
+            elif opc in ("call", "async-start"):
+                mc = _CALL_RE.search(ins.rest)
+                if mc:
+                    st.add(comp_stats(mc.group(1)))
+            elif opc == "conditional":
+                mb = _BRANCH_RE.search(ins.rest)
+                if mb:
+                    subs = [comp_stats(c.strip().lstrip("%"))
+                            for c in mb.group(1).split(",")]
+                    if subs:
+                        # execute one branch; take the max as upper bound
+                        worst = max(subs, key=lambda s: s.flops)
+                        st.add(worst)
+            elif opc == "fusion":
+                mc = _CALL_RE.search(ins.rest)
+                if mc:
+                    inner = comp_stats(mc.group(1))
+                    st.flops += inner.flops       # dots inside fusions
+                    st.coll_bytes += inner.coll_bytes
+
+            base = opc.replace("-start", "")
+            if base in COLLECTIVES or opc in _COLL_FACTOR:
+                b = shape_bytes(ins.type_str) * _COLL_FACTOR.get(
+                    opc, _COLL_FACTOR.get(base, 1.0))
+                if tpu_model and ins.type_str.startswith("f32"):
+                    b //= 2   # XLA:CPU upcast; TPU moves bf16 activations
+                st.coll_bytes += b
+                st.coll_counts[base] = st.coll_counts.get(base, 0) + 1
+
+            # ---- bytes (HBM traffic model) ----
+            if opc in _ZERO_TRAFFIC_OPS or opc == "while":
+                continue   # while carries are aliased in place
+            # in-place slice ops: traffic = slice size, not buffer size
+            root = opc
+            if opc == "fusion":
+                mc = _CALL_RE.search(ins.rest)
+                if mc:
+                    root = comp_root_opcode(mc.group(1))
+            if root == "convert" or opc == "convert":
+                # XLA:CPU upcasts bf16 weights/caches to f32 with standalone
+                # convert fusions; on TPU converts fuse into consumers with
+                # no extra HBM pass. Zero-traffic by the TPU model.
+                continue
+            if tpu_model and (root == "copy" or opc == "copy"
+                              or root == "broadcast"):
+                continue
+            if opc == "dot" and tpu_model:
+                # count dot traffic at bf16 width (MXU reads bf16 on TPU;
+                # XLA:CPU upcast made these buffers f32). Operands whose
+                # producer dequantizes an s8 buffer count at 1 B/elem — the
+                # fused TPU kernel streams the int8 cache directly.
+                def elems(ts):
+                    return max(shape_bytes(ts) // max(_DTYPE_BYTES.get(
+                        _SHAPE_RE.search(ts).group(1), 4), 1), 1) \
+                        if _SHAPE_RE.search(ts) else 0
+
+                b = shape_bytes(ins.type_str)
+                if ins.type_str.startswith("f32"):
+                    b //= 2
+                for op in ins.operands:
+                    src = comp.by_name.get(op)
+                    if src is None:
+                        continue
+                    n_el = elems(src.type_str)
+                    width = 2 if src.type_str.startswith(("f32", "bf16")) \
+                        else _DTYPE_BYTES.get(
+                            _SHAPE_RE.search(src.type_str).group(1), 2)
+                    if src.opcode in ("fusion", "convert"):
+                        for op2 in src.operands:
+                            s2 = comp.by_name.get(op2)
+                            if s2 is not None and s2.type_str.startswith(
+                                    ("s8[", "u8[")) \
+                                    and elems(s2.type_str) == n_el:
+                                width = 1
+                                break
+                    b += n_el * width
+                st.bytes += b
+                continue
+            if root in ("dynamic-slice", "gather"):
+                st.bytes += 2 * shape_bytes(ins.type_str)   # read + write out
+                continue
+            if root in ("dynamic-update-slice", "scatter"):
+                ops_b = nonscalar_operand_bytes(ins, comp)
+                upd = min(ops_b) if ops_b else shape_bytes(ins.type_str)
+                st.bytes += 2 * upd                          # read + write in
+                continue
+            if tpu_model and opc == "fusion":
+                # dequantization fusions (s8 -> wide elementwise) fuse into
+                # their consumer on TPU: zero extra HBM pass
+                out_el = shape_bytes(ins.type_str) // 4 \
+                    if ins.type_str.startswith("f32") else None
+                is_deq = False
+                for op in ins.operands:
+                    src = comp.by_name.get(op)
+                    if (src is not None and src.type_str.startswith(
+                            ("s8[", "u8["))
+                            and out_el is not None
+                            and shape_bytes(src.type_str) == out_el):
+                        is_deq = True
+                        break
+                if is_deq:
+                    continue
+            st.bytes += shape_bytes(ins.type_str)
+            for op in ins.operands:
+                src = comp.by_name.get(op)
+                if src is not None and src.opcode not in (
+                        "constant", "get-tuple-element", "tuple"):
+                    st.bytes += shape_bytes(src.type_str)
+        return st
+
+    # evaluate from entry; fused computations are only reached via their
+    # call sites (flops), never directly for bytes
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comp_stats(entry.name)

@@ -1,0 +1,60 @@
+"""Serving launcher: build cache profiles for a corpus, then serve
+semantic-operator requests (the paper's online phase).
+
+    python -m repro.launch.serve --items 200 --ratios 0.0,0.5,0.8
+
+On a TPU fleet this runs one engine per model replica group; the CPU path
+drives the planted reduced models end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from repro.cache.store import CacheStore
+from repro.data.synthetic import (TOK_NO, TOK_YES, filter_query_token,
+                                  make_dataset, make_planted_params,
+                                  planted_config)
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--items", type=int, default=200)
+    ap.add_argument("--ratios", type=str, default="0.0,0.5,0.8")
+    ap.add_argument("--cache-dir", type=str, default=None)
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    ratios = [float(r) for r in args.ratios.split(",")]
+
+    ds = make_dataset("serve", args.items, seed=0)
+    store = CacheStore(args.cache_dir or tempfile.mkdtemp())
+    engine = ServingEngine(store)
+    t0 = time.time()
+    for size in ("sm", "lg"):
+        cfg = planted_config(size)
+        engine.register_model(size, cfg, make_planted_params(cfg, seed=1))
+        engine.build_profiles(size, ds.items, ratios=ratios)
+    print(f"[serve] offline phase: {time.time() - t0:.1f}s "
+          f"({args.items} items x 2 models x {len(ratios)} ratios)")
+
+    ids = [it.item_id for it in ds.items]
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        task = int(rng.integers(0, ds.n_filter_tasks))
+        size = ("sm", "lg")[i % 2]
+        ratio = ratios[i % len(ratios)]
+        t0 = time.time()
+        lo = engine.run_filter(size, ratio, ids,
+                               [filter_query_token(task)], TOK_YES, TOK_NO)
+        dt = time.time() - t0
+        print(f"[serve] req{i}: filter task={task} profile={size}-r{ratio} "
+              f"-> {int((lo > 0).sum())}/{len(ids)} accepted, "
+              f"{len(ids) / dt:.0f} items/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+No device allocation happens here — these are the inputs to
+``jax.jit(...).lower()`` in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as sh
+from repro.models import cache_axes, init_cache, param_axes
+from repro.models.transformer import model_template, _is_spec
+from repro.training.optimizer import AdamWState
+
+PyTree = Any
+
+
+def params_sds(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct tree matching init_params exactly."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def mk(spec):
+        dt = jnp.float32 if spec.init == "alog" else dtype
+        return jax.ShapeDtypeStruct(spec.shape, dt)
+
+    return jax.tree.map(mk, model_template(cfg), is_leaf=_is_spec)
+
+
+def opt_state_sds(cfg: ModelConfig) -> AdamWState:
+    p = params_sds(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(f32, p),
+        v=jax.tree.map(f32, p),
+    )
+
+
+def cache_sds(cfg: ModelConfig, batch: int, max_len: int,
+              quant: bool = False) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len,
+                                             quant=quant))
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.frontend == "none":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))}
+    if cfg.frontend == "none":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    else:
+        out = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                              jnp.dtype(cfg.dtype)),
+               "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return out
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "decode":
+        if cfg.frontend == "none":
+            return {"tokens": ("batch", None)}
+        return {"embeds": ("batch", None, None)}
+    if cfg.frontend == "none":
+        return {"tokens": ("batch", "seq")}
+    return {"embeds": ("batch", "seq", None),
+            "labels": ("batch", "seq")}
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, mesh,
+              fsdp: Optional[str] = "data") -> Dict[str, Any]:
+    """Sharding rules for one dry-run cell.
+
+    - train/prefill: DP over (pod, data), TP/EP over model, FSDP over data.
+    - decode: params replicated over data (serving replicas); cache batch
+      over (pod, data). When n_kv_heads doesn't divide the model axis (GQA
+      kv=8 vs TP=16, or MLA latent caches), the cache *sequence* dim is
+      sharded over model instead (split-S / flash-decoding style).
+    - long_500k (batch=1): sequence parallelism — cache_seq additionally
+      over data.
+    """
+    model_size = mesh.shape["model"]
+    dp_size = mesh.devices.size // model_size
+    overrides: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        # serving: weights replicated across data for latency — unless the
+        # model is too big for TP alone (dbrx: 264 GB bf16 / 16 = 16.5 GB >
+        # HBM), in which case ZeRO-inference FSDP-shards them over data and
+        # re-gathers per layer (amortized over the decode batch).
+        tp_bytes = 2.0 * cfg.n_params / model_size
+        overrides["fsdp"] = "data" if tp_bytes > 8e9 else None
+        seq_axes = []
+        kv_shardable = (cfg.attn_kind in ("gqa", "hymba")
+                        and cfg.n_kv_heads % model_size == 0)
+        if not kv_shardable:
+            overrides["kv_heads"] = None
+            seq_axes.append("model")
+        if shape.global_batch % dp_size != 0:
+            # can't shard tiny batch: sequence parallelism on the cache
+            overrides["batch"] = None
+            overrides["cache_batch"] = None
+            seq_axes.insert(0, "data")
+        if seq_axes:
+            overrides["cache_seq"] = (tuple(seq_axes) if len(seq_axes) > 1
+                                      else seq_axes[0])
+    else:
+        overrides["fsdp"] = fsdp
+    return sh.make_rules(**overrides)
+
+
+def shardings_for(tree_axes: PyTree, mesh) -> PyTree:
+    """Logical-axes pytree -> NamedSharding pytree (active rules required)."""
+    def mk(axes):
+        return NamedSharding(mesh, sh.resolve(axes))
+    return jax.tree.map(
+        mk, tree_axes,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(x, (str, type(None))) for x in v))

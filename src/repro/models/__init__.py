@@ -1,0 +1,6 @@
+from repro.models.transformer import (build_window_array, cache_axes,
+                                      decode_step, forward, init_cache,
+                                      init_params, param_axes, prefill)
+
+__all__ = ["init_params", "param_axes", "forward", "prefill", "decode_step",
+           "init_cache", "cache_axes", "build_window_array"]

@@ -1,0 +1,624 @@
+"""Layer primitives for the model zoo.
+
+Pure-functional JAX. All mixers share the conventions:
+  - activations  x: (B, S, d_model), compute dtype = cfg.dtype (bf16 default)
+  - reductions (softmax / norm / recurrent state) run in f32
+  - full-sequence paths never materialize (S, S) score matrices: attention is
+    blocked with an online softmax (flash-style) so the 32k prefill shapes fit
+  - decode paths take a cache pytree and a scalar-or-vector position
+
+The per-layer window size is *data* (an int32 scalar per layer), which lets a
+single `lax.scan` over layers express gemma3's 5:1 local:global pattern and
+hymba's mixed SWA/global layout. A "global" layer simply carries window=2^30.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+GLOBAL_WINDOW = 1 << 30   # sentinel: effectively unbounded window
+
+# perf-iteration knobs (set by launch.dryrun --opt ...; see EXPERIMENTS §Perf)
+FLASH_BLOCK = 512
+MOE_IMPL = "auto"
+
+
+# ---------------------------------------------------------------------------
+# small utilities
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def rope_freqs(d: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, d_head); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) attention — pure jnp oracle used for train / prefill
+# ---------------------------------------------------------------------------
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest block size <= target that divides n."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: jax.Array, *, block_q: int = 512,
+                    block_k: int = 512, causal: bool = True,
+                    q_offset: int = 0) -> jax.Array:
+    """Blocked causal/windowed attention with online softmax.
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh); GQA groups = H // KV.
+    window: int32 scalar (traced ok) — attend to [i - window + 1, i].
+    Never materializes (Sq, Sk). Rectangle schedule: every (qi, kj) block pair
+    is computed and masked; the triangular schedule is a perf iteration
+    (see kernels/ and EXPERIMENTS §Perf).
+    """
+    B, Sq, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    dv = v.shape[-1]
+    G = H // KV
+    block_q = _divisor_block(Sq, block_q)
+    block_k = _divisor_block(Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    qg = q.reshape(B, Sq, KV, G, dh)
+    scale = dh ** -0.5
+
+    def q_block_body(_, qi):
+        q_blk = lax.dynamic_slice_in_dim(qg, qi * block_q, block_q, axis=1)
+        q_blk = (q_blk.astype(jnp.float32) * scale)
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = lax.dynamic_slice_in_dim(k, kj * block_k, block_k, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, kj * block_k, block_k, axis=1)
+            k_pos = kj * block_k + jnp.arange(block_k)
+            # scores: (B, KV, G, bq, bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk,
+                           k_blk.astype(jnp.float32))
+            mask = k_pos[None, :] <= q_pos[:, None] if causal else True
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, block_q, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return (), out.astype(q.dtype)                 # (B, KV, G, bq, dh)
+
+    _, blocks = lax.scan(q_block_body, (), jnp.arange(nq))
+    # blocks: (nq, B, KV, G, bq, dv) -> (B, Sq, H, dv)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, KV, G, Sq, dv)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, H, dv)
+    return out
+
+
+def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array, window: jax.Array) -> jax.Array:
+    """Single-token attention against a (compressed) cache.
+
+    q: (B, H, dh); k_cache/v_cache: (B, S, KV, dh); lengths: (B,) valid length.
+    Window masking is relative to the *last* position (lengths - 1).
+    """
+    B, H, dh = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh).astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)[None, :]
+    q_pos = (lengths - 1)[:, None]
+    mask = (pos < lengths[:, None]) & (q_pos - pos < window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, dh).astype(k_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (granite / gemma3 / minitron / llava / musicgen / dbrx)
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, KV, dh)
+    v = (x @ p["wv"]).reshape(B, S, KV, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attn_full(p, x, cfg: ModelConfig, window, positions):
+    """Train/prefill path. Returns (attn_out, (k, v)) — caller may cache k/v."""
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, window, block_q=FLASH_BLOCK,
+                          block_k=FLASH_BLOCK)
+    B, S, _, _ = q.shape
+    out = out.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], (k, v)
+
+
+def gqa_attn_decode(p, x, cfg: ModelConfig, window, cache_k, cache_v,
+                    lengths):
+    """x: (B, 1, d). cache_[kv]: (B, S, KV, dh) already containing this step's
+    k/v at position lengths-1 (the caller updates the cache first)."""
+    B = x.shape[0]
+    positions = (lengths - 1)[:, None]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta)[:, 0]
+    out = decode_attention_jnp(q, cache_k, cache_v, lengths, window)
+    return out.reshape(B, 1, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def gqa_new_kv(p, x, cfg: ModelConfig, lengths):
+    """Project this step's k/v for cache insertion. x: (B, 1, d)."""
+    B = x.shape[0]
+    positions = (lengths - 1)[:, None]
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (minicpm3 / deepseek-v2-lite)
+# ---------------------------------------------------------------------------
+# Cache layout is the *latent* stream: c_kv (B, S, kv_lora) + k_rope
+# (B, S, qk_rope_dim) — this is what Stretto's compression ladder operates on
+# for MLA archs (Expected-Attention scores over latent rows).
+
+def mla_project_q(p, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if m.q_lora_rank:
+        q = (x @ p["wq_a"]) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latents(p, x, cfg: ModelConfig, positions):
+    """Latent stream for caching: c_kv (B,S,r), k_rope (B,S,rope)."""
+    m = cfg.mla
+    ckv_rope = x @ p["w_kv_a"]                       # (B,S, r + rope)
+    c_kv, k_rope = jnp.split(ckv_rope, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions,
+                        cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attn_full(p, x, cfg: ModelConfig, window, positions):
+    """Naive (non-absorbed) MLA for train/prefill: expand K/V per head."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = mla_project_q(p, x, cfg, positions)
+    c_kv, k_rope = mla_latents(p, x, cfg, positions)
+    kv = (c_kv @ p["w_kv_b"]).reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_dim))], axis=-1)
+    out = flash_attention(q, k, v, window, block_q=FLASH_BLOCK,
+                          block_k=FLASH_BLOCK)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return out @ p["wo"], (c_kv, k_rope)
+
+
+def mla_attn_decode(p, x, cfg: ModelConfig, window, cache_ckv, cache_krope,
+                    lengths):
+    """Absorbed MLA decode: MQA over the latent cache (no K/V expansion).
+
+    score_h(t,s) = q_nope_h W_uk_h · c_kv_s + q_rope_h · k_rope_s
+    out_h       = (softmax · c_kv) W_uv_h
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = (lengths - 1)[:, None]
+    q_nope, q_rope = mla_project_q(p, x, cfg, positions)     # (B,1,H,·)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]              # (B,H,·)
+    w_kv_b = p["w_kv_b"].reshape(m.kv_lora_rank, H,
+                                 m.qk_nope_dim + m.v_head_dim)
+    w_uk = w_kv_b[..., :m.qk_nope_dim]                       # (r, H, nope)
+    w_uv = w_kv_b[..., m.qk_nope_dim:]                       # (r, H, v)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # (B,H,r)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                    cache_ckv.astype(jnp.float32))
+         + jnp.einsum("bhp,bsp->bhs", q_rope.astype(jnp.float32),
+                      cache_krope.astype(jnp.float32))) * scale
+    S = cache_ckv.shape[1]
+    pos = jnp.arange(S)[None, :]
+    mask = (pos < lengths[:, None]) & ((lengths - 1)[:, None] - pos < window)
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(p, x):
+    return (silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE MLP — GShard-style dense capacity dispatch (default; shards cleanly as
+# all-to-all under EP) and a scatter-based dispatch (perf alternative for
+# fine-grained experts; see EXPERIMENTS §Perf).
+# ---------------------------------------------------------------------------
+
+def moe_mlp(p, x, cfg: ModelConfig, impl: Optional[str] = None):
+    """MoE feed-forward. Two dispatch strategies:
+
+    - "dense": GShard-style one-hot dispatch/combine einsums. Shards
+      cleanly (all-to-all under EP) but builds a (T, E, C) tensor —
+      O(T^2 k cf d / E) FLOPs and memory. Only viable for small T.
+    - "scatter": cumsum position assignment + scatter into per-expert
+      buffers — exact expert FLOPs, O(T k d) traffic. The default for
+      long sequences (prefill_32k would need a 400+ GB dispatch tensor
+      under "dense"; see EXPERIMENTS.md §Perf).
+    """
+    e = cfg.moe
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    T = B * S
+    impl = impl or MOE_IMPL
+    if impl == "auto":
+        impl = "dense" if T <= 8192 else "scatter"
+    logits = (x_flat @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = lax.top_k(probs, e.top_k)                 # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(max(4, e.capacity_factor * e.top_k * T / e.n_experts))
+    capacity = min(capacity, T)
+
+    if impl == "dense":
+        # one-hot dispatch/combine einsums (GShard / Switch style)
+        onehot = jax.nn.one_hot(idx, e.n_experts, dtype=jnp.float32)  # (T,k,E)
+        # position of each (token, slot) within its expert
+        pos = (jnp.cumsum(onehot.reshape(T * e.top_k, e.n_experts), axis=0)
+               - onehot.reshape(T * e.top_k, e.n_experts))
+        pos = pos.reshape(T, e.top_k, e.n_experts)
+        keep = (pos < capacity) & (onehot > 0)
+        pos_kept = jnp.where(keep, pos, 0).sum(-1).astype(jnp.int32)  # (T,k)
+        keep_tok = keep.any(-1)                                        # (T,k)
+        cap_oh = jax.nn.one_hot(pos_kept, capacity, dtype=jnp.float32)
+        disp = jnp.einsum("tke,tkc,tk->tec", onehot, cap_oh,
+                          keep_tok.astype(jnp.float32))                # (T,E,C)
+        comb = jnp.einsum("tec,tke,tk->tec", disp, onehot,
+                          gate_vals.astype(jnp.float32))
+        xin = jnp.einsum("tec,td->ecd", disp, x_flat.astype(jnp.float32))
+        xin = xin.astype(x.dtype)
+        h = silu(jnp.einsum("ecd,edf->ecf", xin, p["experts"]["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", xin, p["experts"]["w_up"])
+        eo = jnp.einsum("ecf,efd->ecd", h, p["experts"]["w_down"])
+        y = jnp.einsum("tec,ecd->td", comb, eo.astype(jnp.float32))
+        y = y.astype(x.dtype)
+    else:
+        # row-local scatter dispatch: positions/capacity are computed per
+        # batch row (GShard "groups"), so with batch sharded over data the
+        # cumsum and scatters stay device-local — no global cumsum gather,
+        # no replicated expert-buffer all-reduce (EXPERIMENTS §Perf). The
+        # expert matmul shards E over `model`; the only collective left is
+        # the standard combine all-reduce of (B_local, S, d).
+        k = e.top_k
+        cap = int(max(4, e.capacity_factor * k * S / e.n_experts))
+        cap = min(cap, S * k)
+        idx_r = idx.reshape(B, S * k)                          # (B, S*k)
+        gate_r = gate_vals.reshape(B, S * k)
+        oh = jax.nn.one_hot(idx_r, e.n_experts, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=1) - oh                      # row-local
+        pos = (pos * oh).sum(-1)                               # (B, S*k)
+        keep = pos < cap
+        safe_pos = jnp.where(keep, pos, cap - 1)
+        # dispatch = tiny int32 scatter (slot -> source token) followed by
+        # a gather of token rows. Both use *_along_axis so they lower to
+        # batched scatter/gather ops that XLA SPMD shards over `data`;
+        # fancy-indexed variants were replicated across the global batch.
+        # Dropped tokens go to a dump slot (index cap) that is sliced off.
+        src_tok = jnp.broadcast_to(
+            jnp.arange(S * k, dtype=jnp.int32)[None, :] // k, (B, S * k))
+        scat_idx = idx_r * (cap + 1) + jnp.where(keep, safe_pos, cap)
+        slot_flat = jnp.full((B, e.n_experts * (cap + 1)), -1, jnp.int32)
+        slot_flat = jnp.put_along_axis(slot_flat, scat_idx, src_tok,
+                                       axis=1, inplace=False)
+        slot_tok = slot_flat.reshape(B, e.n_experts, cap + 1)[:, :, :cap]
+        valid = slot_tok >= 0
+        # take_along_axis lowers to gathers with explicit batch dims, which
+        # XLA SPMD shards over `data`; fancy-indexed gathers were treated
+        # as unbatched and replicated the global batch (§Perf B3)
+        flat_slot = jnp.clip(slot_tok, 0, S - 1).reshape(B, -1)
+        buf = jnp.take_along_axis(x, flat_slot[..., None], axis=1)
+        buf = buf.reshape(B, e.n_experts, cap, d)              # (B,E,C,d)
+        buf = jnp.where(valid[..., None], buf, 0)
+        h = silu(jnp.einsum("becd,edf->becf", buf,
+                            p["experts"]["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", buf, p["experts"]["w_up"])
+        eo = jnp.einsum("becf,efd->becd", h, p["experts"]["w_down"])
+        comb_idx = (idx_r * cap + safe_pos)                    # (B, S*k)
+        rows = jnp.take_along_axis(
+            eo.reshape(B, e.n_experts * cap, d),
+            comb_idx[..., None], axis=1)                       # (B, S*k, d)
+        w = jnp.where(keep, gate_r, 0.0)
+        y = (rows.astype(jnp.float32) * w[..., None]).reshape(
+            B, S, k, d).sum(2).astype(x.dtype)
+        return (y + (swiglu_mlp(p["shared"], x.reshape(B * S, d))
+                     .reshape(B, S, d) if e.n_shared_experts else 0.0))
+
+    if e.n_shared_experts:
+        y = y + swiglu_mlp(p["shared"], x_flat)
+    return y.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba mixer (hymba's SSM heads). Sequential scan over time (TPU kernel is
+# the chunked form; this jnp path keeps peak memory at O(B·d_inner·d_state)).
+# ---------------------------------------------------------------------------
+
+def mamba_mix_full(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d). Returns (out, (conv_state, final_state))."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = s.expand * d
+    xz = x @ p["w_in"]                                   # (B,S,2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_raw = xi
+    # depthwise causal conv, kernel (di, d_conv)
+    pad = jnp.pad(xi, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    idx = jnp.arange(S)[:, None] + jnp.arange(s.d_conv)[None, :]
+    windows = pad[:, idx]                                # (B,S,K,di)
+    xi = silu(jnp.einsum("bskd,dk->bsd", windows, p["conv_w"]) + p["conv_b"])
+    dt = jax.nn.softplus((xi @ p["w_dt_a"]) @ p["w_dt_b"] + p["dt_bias"])
+    Bm = xi @ p["w_B"]                                   # (B,S,ds)
+    Cm = xi @ p["w_C"]                                   # (B,S,ds)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (di,ds)
+
+    def step(h, inp):
+        xi_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)        # (B,di,ds)
+        dBx = (dt_t * xi_t)[..., None] * B_t[:, None, :]             # (B,di,ds)
+        h = h * dA + dBx.astype(jnp.float32)
+        y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B, di, s.d_state), jnp.float32)
+    xs = (jnp.moveaxis(xi, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h_final, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)           # (B,S,di)
+    y = y + xi * p["D"]
+    y = y * silu(z)
+    conv_state = jnp.pad(xi_raw, ((0, 0), (s.d_conv - 1, 0), (0, 0))
+                         )[:, S:S + s.d_conv - 1]        # last K-1 pre-conv xi
+    return y @ p["w_out"], (conv_state, h_final)
+
+
+def mamba_mix_step(p, x, cfg: ModelConfig, conv_state, ssm_state):
+    """Decode step. x: (B, 1, d). conv_state: (B, d_conv-1, di),
+    ssm_state: (B, di, ds) f32."""
+    s = cfg.ssm
+    B, _, d = x.shape
+    di = s.expand * d
+    xz = x[:, 0] @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([conv_state, xi[:, None, :]], axis=1)  # (B,K,di)
+    new_conv = hist[:, 1:]
+    xi = silu(jnp.einsum("bkd,dk->bd", hist, p["conv_w"]) + p["conv_b"])
+    dt = jax.nn.softplus((xi @ p["w_dt_a"]) @ p["w_dt_b"] + p["dt_bias"])
+    B_t = xi @ p["w_B"]
+    C_t = xi @ p["w_C"]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)
+    dBx = (dt * xi)[..., None] * B_t[:, None, :]
+    h = ssm_state * dA + dBx.astype(jnp.float32)
+    y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32)).astype(x.dtype)
+    y = y + xi * p["D"]
+    y = y * silu(z)
+    return (y @ p["w_out"])[:, None, :], new_conv, h
+
+
+# ---------------------------------------------------------------------------
+# Hymba layer: parallel attention heads + mamba heads, outputs mean-fused
+# after per-branch RMSNorm (arXiv:2411.13676).
+# ---------------------------------------------------------------------------
+
+def hymba_mix_full(p, x, cfg: ModelConfig, window, positions):
+    attn_out, kv = gqa_attn_full(p["attn"], x, cfg, window, positions)
+    ssm_out, ssm_states = mamba_mix_full(p["ssm"], x, cfg)
+    out = 0.5 * (rms_norm(attn_out, p["norm_attn"], cfg.norm_eps)
+                 + rms_norm(ssm_out, p["norm_ssm"], cfg.norm_eps))
+    return out, kv, ssm_states
+
+
+def hymba_mix_decode(p, x, cfg: ModelConfig, window, cache_k, cache_v,
+                     lengths, conv_state, ssm_state):
+    attn_out = gqa_attn_decode(p["attn"], x, cfg, window, cache_k, cache_v,
+                               lengths)
+    ssm_out, new_conv, new_ssm = mamba_mix_step(p["ssm"], x, cfg,
+                                                conv_state, ssm_state)
+    out = 0.5 * (rms_norm(attn_out, p["norm_attn"], cfg.norm_eps)
+                 + rms_norm(ssm_out, p["norm_ssm"], cfg.norm_eps))
+    return out, new_conv, new_ssm
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear recurrence.
+# Train path: chunked-parallel form (GLA-style) — O(T/C) state updates.
+# Decode path: O(1) state update.
+# ---------------------------------------------------------------------------
+
+RWKV_CHUNK = 32
+_LOGW_MIN = -8.0 / RWKV_CHUNK   # per-step log-decay clamp for chunk stability
+
+
+def _rwkv_projections(p, x, x_prev):
+    """Token-shifted projections. x: (B,S,d); x_prev: (B,S,d) shifted."""
+    sx = x_prev - x
+    xr = x + sx * p["mu_r"]
+    xk = x + sx * p["mu_k"]
+    xv = x + sx * p["mu_v"]
+    xw = x + sx * p["mu_w"]
+    xg = x + sx * p["mu_g"]
+    r = xr @ p["w_r"]
+    k = xk @ p["w_k"]
+    v = xv @ p["w_v"]
+    g = silu(xg @ p["w_g"])
+    # data-dependent decay (low-rank): w in (0,1), log clamped for chunking
+    logw = -jnp.exp(
+        p["w0"] + jnp.tanh(xw @ p["w_dec_a"]) @ p["w_dec_b"]).astype(
+        jnp.float32)
+    logw = jnp.clip(logw, _LOGW_MIN, -1e-6)
+    return r, k, v, g, logw
+
+
+def rwkv6_mix_full(p, x, cfg: ModelConfig):
+    """Chunked-parallel RWKV6 wkv. x: (B,S,d); S % RWKV_CHUNK == 0.
+    Returns (out, (final_wkv_state, last_x))."""
+    B, S, d = x.shape
+    H = cfg.rwkv_n_heads
+    hd = cfg.rwkv_head_size
+    C = _divisor_block(S, RWKV_CHUNK)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_projections(p, x, x_prev)
+    u = p["u"].reshape(H, hd)
+
+    def heads(t):  # (B,S,d) -> (B, nch, C, H, hd)
+        return t.reshape(B, S // C, C, H, hd)
+
+    r, k, v = heads(r), heads(k), heads(v)
+    logw = heads(logw.astype(jnp.float32))
+    # intra-chunk cumulative decay (inclusive)
+    cum = jnp.cumsum(logw, axis=2)                       # (B,N,C,H,hd)
+    # decayed queries / inverse-decayed keys, relative to chunk start
+    r_f = r.astype(jnp.float32)
+    k_f = k.astype(jnp.float32)
+    v_f = v.astype(jnp.float32)
+    # For wkv, state S has shape (k_dim, v_dim); decay acts on k dim.
+    # out_t = r_t · diag(exp(cum_{t-1})) S_0  + intra + bonus
+    cum_prev = cum - logw                                # exclusive cumsum
+    rq = r_f * jnp.exp(cum_prev)
+    kq = k_f * jnp.exp(-cum)
+    # intra-chunk: A[t,s] = sum_d rq[t,d] kq[s,d] exp(...) for s < t
+    A = jnp.einsum("bnchd,bnshd->bnhcs", rq, kq)         # (B,N,H,C,C)
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), -1)
+    A = A * tri
+    intra = jnp.einsum("bnhcs,bnshd->bnchd", A, v_f)
+    # bonus (current token): (r_t · (u ⊙ k_t)) v_t
+    bonus = jnp.einsum("bnchd,hd,bnchd->bnch", r_f, u, k_f)
+    intra = intra + bonus[..., None] * v_f
+    # inter-chunk: scan over chunks carrying state (B,H,hd,hd)
+    chunk_decay = jnp.exp(cum[:, :, -1])                 # (B,N,H,hd)
+    # per-chunk key outer-products, pre-decayed to chunk end:
+    k_to_end = k_f * jnp.exp(cum[:, :, -1:] - cum)       # (B,N,C,H,hd)
+
+    def chunk_step(state, inp):
+        rq_c, v_c, kte_c, dec_c, = inp
+        out_c = jnp.einsum("bchd,bhdv->bchv", rq_c, state)
+        new_state = state * dec_c[..., None] + jnp.einsum(
+            "bchd,bchv->bhdv", kte_c, v_c)
+        return new_state, out_c
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = (jnp.moveaxis(rq, 1, 0), jnp.moveaxis(v_f, 1, 0),
+          jnp.moveaxis(k_to_end, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    state_f, inter = lax.scan(chunk_step, state0, xs)
+    inter = jnp.moveaxis(inter, 0, 1)                    # (B,N,C,H,hd)
+    wkv = (intra + inter).reshape(B, S, H, hd)
+    # per-head groupnorm
+    wkv = _headwise_norm(wkv, p["ln_w"], p["ln_b"], cfg.norm_eps)
+    out = (wkv.reshape(B, S, d).astype(x.dtype) * g) @ p["w_o"]
+    return out, (state_f, x[:, -1])
+
+
+def rwkv6_mix_step(p, x, cfg: ModelConfig, wkv_state, x_prev):
+    """Decode step. x: (B,1,d); wkv_state: (B,H,hd,hd) f32; x_prev: (B,d)."""
+    B, _, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    r, k, v, g, logw = _rwkv_projections(p, x, x_prev[:, None, :])
+    r = r.reshape(B, H, hd).astype(jnp.float32)
+    k = k.reshape(B, H, hd).astype(jnp.float32)
+    v = v.reshape(B, H, hd).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, hd))
+    u = p["u"].reshape(H, hd)
+    kv = k[..., :, None] * v[..., None, :]               # (B,H,hd,hd)
+    out = jnp.einsum("bhd,bhdv->bhv", r, wkv_state + u[..., None] * kv)
+    new_state = wkv_state * w[..., None] + kv
+    out = out.reshape(B, 1, H, hd)
+    out = _headwise_norm(out, p["ln_w"], p["ln_b"], cfg.norm_eps)
+    out = (out.reshape(B, 1, d).astype(x.dtype) * g) @ p["w_o"]
+    return out, new_state, x[:, 0]
+
+
+def _headwise_norm(x, w, b, eps):
+    """LayerNorm over the last dim (per head). x: (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps) * w + b
+    return out.astype(x.dtype)
+
+
+def rwkv_channel_mix(p, x, x_prev):
+    """RWKV channel mix (squared-relu FFN with token shift)."""
+    sx = x_prev - x
+    xk = x + sx * p["mu_k"]
+    xr = x + sx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"])

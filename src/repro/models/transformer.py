@@ -1,0 +1,527 @@
+"""Config-driven decoder LM: params, forward, prefill, decode.
+
+A single ``lax.scan`` over the layer stack (stacked params) covers every
+assigned architecture; per-layer structure differences (gemma3 local:global,
+hymba SWA/global) are carried as *data* — an int32 window per layer — so the
+scanned body is uniform and the HLO stays small enough to compile 512-way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import sc
+from repro.models import layers as L
+
+PyTree = Any
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axes, parallel to shape
+    init: str = "normal"              # normal | zeros | ones | alog
+
+
+# ---------------------------------------------------------------------------
+# parameter templates
+# ---------------------------------------------------------------------------
+
+def _attn_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "wq": ParamSpec((d, H * dh), ("fsdp", "heads")),
+        "wk": ParamSpec((d, KV * dh), ("fsdp", "heads")),
+        "wv": ParamSpec((d, KV * dh), ("fsdp", "heads")),
+        "wo": ParamSpec((H * dh, d), ("heads", "fsdp")),
+    }
+
+
+def _mla_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H, m = cfg.d_model, cfg.n_heads, cfg.mla
+    qdim = H * (m.qk_nope_dim + m.qk_rope_dim)
+    t: Dict[str, ParamSpec] = {}
+    if m.q_lora_rank:
+        t["wq_a"] = ParamSpec((d, m.q_lora_rank), ("fsdp", None))
+        t["wq_b"] = ParamSpec((m.q_lora_rank, qdim), (None, "heads"))
+    else:
+        t["wq"] = ParamSpec((d, qdim), ("fsdp", "heads"))
+    t["w_kv_a"] = ParamSpec((d, m.kv_lora_rank + m.qk_rope_dim),
+                            ("fsdp", None))
+    t["kv_norm"] = ParamSpec((m.kv_lora_rank,), (None,), "zeros")
+    t["w_kv_b"] = ParamSpec(
+        (m.kv_lora_rank, H * (m.qk_nope_dim + m.v_head_dim)),
+        (None, "heads"))
+    t["wo"] = ParamSpec((H * m.v_head_dim, d), ("heads", "fsdp"))
+    return t
+
+
+def _mamba_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, s = cfg.d_model, cfg.ssm
+    di = s.expand * d
+    rank = max(16, d // 32)
+    return {
+        "w_in": ParamSpec((d, 2 * di), ("fsdp", "ff")),
+        "conv_w": ParamSpec((di, s.d_conv), ("ff", None)),
+        "conv_b": ParamSpec((di,), ("ff",), "zeros"),
+        "w_dt_a": ParamSpec((di, rank), ("ff", None)),
+        "w_dt_b": ParamSpec((rank, di), (None, "ff")),
+        "dt_bias": ParamSpec((di,), ("ff",), "zeros"),
+        "w_B": ParamSpec((di, s.d_state), ("ff", None)),
+        "w_C": ParamSpec((di, s.d_state), ("ff", None)),
+        "A_log": ParamSpec((di, s.d_state), ("ff", None), "alog"),
+        "D": ParamSpec((di,), ("ff",), "ones"),
+        "w_out": ParamSpec((di, d), ("ff", "fsdp")),
+    }
+
+
+def _rwkv_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    dec_rank = 64
+    mix = {
+        **{f"mu_{n}": ParamSpec((d,), (None,), "zeros")
+           for n in "rkvwg"},
+        "w_r": ParamSpec((d, d), ("fsdp", "heads")),
+        "w_k": ParamSpec((d, d), ("fsdp", "heads")),
+        "w_v": ParamSpec((d, d), ("fsdp", "heads")),
+        "w_g": ParamSpec((d, d), ("fsdp", "heads")),
+        "w_o": ParamSpec((d, d), ("heads", "fsdp")),
+        "w_dec_a": ParamSpec((d, dec_rank), ("fsdp", None)),
+        "w_dec_b": ParamSpec((dec_rank, d), (None, "heads"), "zeros"),
+        "w0": ParamSpec((d,), ("heads",), "ones"),
+        "u": ParamSpec((d,), ("heads",), "zeros"),
+        "ln_w": ParamSpec((H, hd), ("heads", None), "ones"),
+        "ln_b": ParamSpec((H, hd), ("heads", None), "zeros"),
+    }
+    cmix = {
+        "mu_k": ParamSpec((d,), (None,), "zeros"),
+        "mu_r": ParamSpec((d,), (None,), "zeros"),
+        "w_k": ParamSpec((d, ff), ("fsdp", "ff")),
+        "w_v": ParamSpec((ff, d), ("ff", "fsdp")),
+        "w_r": ParamSpec((d, d), ("fsdp", None)),
+    }
+    return {"attn": mix, "mlp": cmix}
+
+
+def _mlp_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, ff), ("fsdp", "ff")),
+        "w_up": ParamSpec((d, ff), ("fsdp", "ff")),
+        "w_down": ParamSpec((ff, d), ("ff", "fsdp")),
+    }
+
+
+def _moe_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, e = cfg.d_model, cfg.moe
+    ffe = e.d_ff_expert
+    t = {
+        "router": ParamSpec((d, e.n_experts), (None, None)),
+        "experts": {
+            "w_gate": ParamSpec((e.n_experts, d, ffe),
+                                ("expert", "fsdp", "ffe")),
+            "w_up": ParamSpec((e.n_experts, d, ffe),
+                              ("expert", "fsdp", "ffe")),
+            "w_down": ParamSpec((e.n_experts, ffe, d),
+                                ("expert", "ffe", "fsdp")),
+        },
+    }
+    if e.n_shared_experts:
+        ffs = e.n_shared_experts * ffe
+        t["shared"] = {
+            "w_gate": ParamSpec((d, ffs), ("fsdp", "ff")),
+            "w_up": ParamSpec((d, ffs), ("fsdp", "ff")),
+            "w_down": ParamSpec((ffs, d), ("ff", "fsdp")),
+        }
+    return t
+
+
+def layer_template(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    if cfg.attn_kind == "rwkv6":
+        t = _rwkv_template(cfg)
+    else:
+        if cfg.attn_kind == "gqa":
+            attn = _attn_template(cfg)
+        elif cfg.attn_kind == "mla":
+            attn = _mla_template(cfg)
+        elif cfg.attn_kind == "hymba":
+            attn = {
+                "attn": _attn_template(cfg),
+                "ssm": _mamba_template(cfg),
+                "norm_attn": ParamSpec((d,), (None,), "zeros"),
+                "norm_ssm": ParamSpec((d,), (None,), "zeros"),
+            }
+        else:
+            raise ValueError(cfg.attn_kind)
+        mlp = _moe_template(cfg) if cfg.is_moe else _mlp_template(cfg)
+        t = {"attn": attn, "mlp": mlp}
+    t["norm_attn"] = ParamSpec((d,), (None,), "zeros")
+    t["norm_mlp"] = ParamSpec((d,), (None,), "zeros")
+    return t
+
+
+def model_template(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_padded
+    stack = jax.tree.map(
+        lambda s: ParamSpec((cfg.n_layers,) + s.shape,
+                            ("layers",) + s.axes, s.init),
+        layer_template(cfg), is_leaf=lambda v: isinstance(v, ParamSpec))
+    t = {
+        "embed": ParamSpec((V, d), ("vocab", None)),
+        "final_norm": ParamSpec((d,), (None,), "zeros"),
+        "layers": stack,
+    }
+    if not cfg.tie_embeddings:
+        t["head"] = ParamSpec((d, V), (None, "vocab"))
+    return t
+
+
+def _is_spec(v):
+    return isinstance(v, ParamSpec)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype: Optional[jnp.dtype] = None) -> PyTree:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    tmpl = model_template(cfg)
+    leaves, treedef = jax.tree.flatten(tmpl, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "alog":
+            # mamba A init: log of 1..d_state per row
+            ds = spec.shape[-1]
+            a = jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))
+            return jnp.broadcast_to(a, spec.shape).astype(jnp.float32)
+        scale = 0.02
+        return (jax.random.normal(k, spec.shape, jnp.float32)
+                * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(s, k)
+                                        for s, k in zip(leaves, keys)])
+
+
+def param_axes(cfg: ModelConfig) -> PyTree:
+    """Pytree of logical-axes tuples (same structure as params)."""
+    return jax.tree.map(lambda s: s.axes, model_template(cfg),
+                        is_leaf=_is_spec)
+
+
+def build_window_array(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (int32). GLOBAL_WINDOW = full attention."""
+    L_ = cfg.n_layers
+    w = np.full((L_,), L.GLOBAL_WINDOW, np.int32)
+    if cfg.window:
+        w[:] = cfg.window
+        if cfg.global_every:
+            w[cfg.global_every - 1::cfg.global_every] = L.GLOBAL_WINDOW
+        for g in cfg.global_layers:
+            w[g] = L.GLOBAL_WINDOW
+        if not cfg.global_every and not cfg.global_layers:
+            pass  # uniform sliding window
+    return w
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens=None, embeds=None):
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.attn_kind != "rwkv6":
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype) \
+            if cfg.name.startswith("gemma3") else x
+    return sc(x, ("batch", "seq", "embed"))
+
+
+def _layer_full(cfg: ModelConfig, p, x, window, positions, collect_cache,
+                collect_hidden: bool = False):
+    """One layer, full-sequence. Returns (x, cache_slice_or_None)."""
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    cache = None
+    if cfg.attn_kind == "gqa":
+        attn_out, (k, v) = L.gqa_attn_full(p["attn"], h, cfg, window,
+                                           positions)
+        if collect_cache:
+            cache = {"k": k, "v": v}
+    elif cfg.attn_kind == "mla":
+        attn_out, (ckv, krope) = L.mla_attn_full(p["attn"], h, cfg, window,
+                                                 positions)
+        if collect_cache:
+            cache = {"c_kv": ckv, "k_rope": krope}
+    elif cfg.attn_kind == "hymba":
+        attn_out, (k, v), (conv, ssm) = L.hymba_mix_full(
+            p["attn"], h, cfg, window, positions)
+        if collect_cache:
+            cache = {"k": k, "v": v, "conv": conv, "ssm": ssm}
+    elif cfg.attn_kind == "rwkv6":
+        attn_out, (wkv, tm_prev) = L.rwkv6_mix_full(p["attn"], h, cfg)
+        if collect_cache:
+            cache = {"wkv": wkv, "tm_prev": tm_prev}
+    else:
+        raise ValueError(cfg.attn_kind)
+    if collect_hidden and cache is not None:
+        cache["h"] = h            # post-norm layer input (EA calibration)
+    x = x + sc(attn_out, ("batch", "seq", "embed"))
+
+    h2 = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    if cfg.attn_kind == "rwkv6":
+        h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        mlp_out = L.rwkv_channel_mix(p["mlp"], h2, h2_prev)
+        if collect_cache:
+            cache["cm_prev"] = h2[:, -1]
+    elif cfg.is_moe:
+        mlp_out = L.moe_mlp(p["mlp"], h2, cfg)
+    else:
+        mlp_out = L.swiglu_mlp(p["mlp"], h2)
+    x = x + sc(mlp_out, ("batch", "seq", "embed"))
+    return x, cache
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None,
+            remat: bool = False, collect_cache: bool = False,
+            collect_hidden: bool = False, remat_policy: str = "none"):
+    """Full-sequence forward. Returns (logits, caches_or_None).
+
+    caches: pytree with per-layer leading dim L (stacked by the layer scan);
+    sequence-indexed leaves have length S (pad to store size happens in
+    ``prefill``).
+    """
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    x = _embed(params, cfg, tokens, embeds)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    windows = jnp.asarray(build_window_array(cfg))
+
+    def body(x, scanned):
+        p, window = scanned
+        x, cache = _layer_full(cfg, p, x, window, positions, collect_cache,
+                               collect_hidden)
+        return x, cache
+
+    if remat:
+        policies = {
+            "none": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }
+        body = jax.checkpoint(body, policy=policies[remat_policy])
+
+    x, caches = lax.scan(body, x, (params["layers"], windows))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = sc(x @ head, ("batch", "seq", "vocab"))
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, quant: bool = False) -> PyTree:
+    """quant=True: int8 KV entries + per-(position, head) f32 scales —
+    halves decode cache traffic/footprint vs bf16 (beyond-paper opt;
+    EXPERIMENTS §Perf)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    Ln = cfg.n_layers
+    c: Dict[str, Any] = {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.attn_kind in ("gqa", "hymba"):
+        kv_shape = (Ln, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        kv_dtype = jnp.int8 if quant else dtype
+        c["k"] = jnp.zeros(kv_shape, kv_dtype)
+        c["v"] = jnp.zeros(kv_shape, kv_dtype)
+        if quant:
+            s_shape = (Ln, batch, max_len, cfg.n_kv_heads)
+            c["k_scale"] = jnp.zeros(s_shape, jnp.float32)
+            c["v_scale"] = jnp.zeros(s_shape, jnp.float32)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        c["c_kv"] = jnp.zeros((Ln, batch, max_len, m.kv_lora_rank), dtype)
+        c["k_rope"] = jnp.zeros((Ln, batch, max_len, m.qk_rope_dim), dtype)
+    if cfg.attn_kind == "hymba":
+        di = cfg.ssm.expand * cfg.d_model
+        c["conv"] = jnp.zeros((Ln, batch, cfg.ssm.d_conv - 1, di), dtype)
+        c["ssm"] = jnp.zeros((Ln, batch, di, cfg.ssm.d_state), jnp.float32)
+    if cfg.attn_kind == "rwkv6":
+        H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_size
+        c["wkv"] = jnp.zeros((Ln, batch, H, hd, hd), jnp.float32)
+        c["tm_prev"] = jnp.zeros((Ln, batch, cfg.d_model), dtype)
+        c["cm_prev"] = jnp.zeros((Ln, batch, cfg.d_model), dtype)
+    return c
+
+
+def cache_axes(cfg: ModelConfig, quant: bool = False) -> PyTree:
+    a: Dict[str, Any] = {"lengths": ("cache_batch",)}
+    if cfg.attn_kind in ("gqa", "hymba"):
+        kv = ("layers", "cache_batch", "cache_seq", "kv_heads", None)
+        a["k"] = kv
+        a["v"] = kv
+        if quant:
+            a["k_scale"] = kv[:-1]
+            a["v_scale"] = kv[:-1]
+    if cfg.attn_kind == "mla":
+        a["c_kv"] = ("layers", "cache_batch", "cache_seq", None)
+        a["k_rope"] = ("layers", "cache_batch", "cache_seq", None)
+    if cfg.attn_kind == "hymba":
+        a["conv"] = ("layers", "cache_batch", None, "ff")
+        a["ssm"] = ("layers", "cache_batch", "ff", None)
+    if cfg.attn_kind == "rwkv6":
+        a["wkv"] = ("layers", "cache_batch", "heads", None, None)
+        a["tm_prev"] = ("layers", "cache_batch", None)
+        a["cm_prev"] = ("layers", "cache_batch", None)
+    return a
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
+            max_len: Optional[int] = None, lengths=None):
+    """Run the full prompt, return (last_logits, cache).
+
+    tokens/embeds are right-padded to S; ``lengths`` (B,) gives true lengths
+    (defaults to S). Cache arrays are padded to ``max_len`` (default S).
+    """
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    max_len = max_len or S
+    logits, caches = forward(params, cfg, tokens, embeds, collect_cache=True)
+    lengths = (jnp.full((B,), S, jnp.int32) if lengths is None
+               else lengths.astype(jnp.int32))
+    cache = init_cache(cfg, B, max_len,
+                       dtype=jnp.dtype(cfg.dtype))
+    cache["lengths"] = lengths
+    for name in ("k", "v", "c_kv", "k_rope"):
+        if name in cache:
+            src = caches[name]                    # (L,B,S,·,·) seq at axis 2
+            cache[name] = lax.dynamic_update_slice_in_dim(
+                cache[name], src.astype(cache[name].dtype), 0, axis=2)
+    for name in ("conv", "ssm", "wkv", "tm_prev", "cm_prev"):
+        if name in cache:
+            cache[name] = caches[name].astype(cache[name].dtype)
+    # last *valid* position logits per item
+    idx = jnp.clip(lengths - 1, 0, S - 1)
+    last = jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return last, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _insert_seq(buf, new, pos, uniform: bool):
+    """Insert new (B,1,...) at per-item seq position pos (B,) into
+    buf (B,S,...)."""
+    if uniform:
+        return lax.dynamic_update_slice_in_dim(buf, new, pos[0], axis=1)
+    B = buf.shape[0]
+    return buf.at[jnp.arange(B), pos].set(new[:, 0])
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
+                uniform_pos: bool = False):
+    """One decode step. tokens: (B, 1) int32 (or embeds (B, 1, d)).
+
+    Returns (logits (B, V), new_cache). The new token sits at position
+    cache["lengths"]; lengths are incremented.
+    """
+    pos = cache["lengths"]                        # (B,)
+    new_len = pos + 1
+    x = _embed(params, cfg, tokens, embeds)       # (B,1,d)
+    windows = jnp.asarray(build_window_array(cfg))
+
+    scan_cache = {k: v for k, v in cache.items() if k != "lengths"}
+
+    def body(x, scanned):
+        p, window, c = scanned
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        new_c = dict(c)
+        if cfg.attn_kind in ("gqa", "hymba"):
+            ap = p["attn"]["attn"] if cfg.attn_kind == "hymba" else p["attn"]
+            k_new, v_new = L.gqa_new_kv(ap, h, cfg, new_len)
+            quant = "k_scale" in c
+            if quant:
+                # int8 KV: per-(token, head) absmax scales
+                ks = jnp.max(jnp.abs(k_new.astype(jnp.float32)), -1) / 127.0
+                vs = jnp.max(jnp.abs(v_new.astype(jnp.float32)), -1) / 127.0
+                k_q = jnp.round(k_new / jnp.maximum(ks, 1e-9)[..., None]
+                                ).astype(jnp.int8)
+                v_q = jnp.round(v_new / jnp.maximum(vs, 1e-9)[..., None]
+                                ).astype(jnp.int8)
+                new_c["k"] = _insert_seq(c["k"], k_q, pos, uniform_pos)
+                new_c["v"] = _insert_seq(c["v"], v_q, pos, uniform_pos)
+                new_c["k_scale"] = _insert_seq(c["k_scale"], ks, pos,
+                                               uniform_pos)
+                new_c["v_scale"] = _insert_seq(c["v_scale"], vs, pos,
+                                               uniform_pos)
+                k_att = (new_c["k"].astype(jnp.bfloat16)
+                         * new_c["k_scale"][..., None].astype(jnp.bfloat16))
+                v_att = (new_c["v"].astype(jnp.bfloat16)
+                         * new_c["v_scale"][..., None].astype(jnp.bfloat16))
+            else:
+                new_c["k"] = _insert_seq(c["k"], k_new.astype(c["k"].dtype),
+                                         pos, uniform_pos)
+                new_c["v"] = _insert_seq(c["v"], v_new.astype(c["v"].dtype),
+                                         pos, uniform_pos)
+                k_att, v_att = new_c["k"], new_c["v"]
+            if cfg.attn_kind == "gqa":
+                attn_out = L.gqa_attn_decode(p["attn"], h, cfg, window,
+                                             k_att, v_att, new_len)
+            else:
+                attn_out, new_conv, new_ssm = L.hymba_mix_decode(
+                    p["attn"], h, cfg, window, k_att, v_att,
+                    new_len, c["conv"], c["ssm"])
+                new_c["conv"] = new_conv.astype(c["conv"].dtype)
+                new_c["ssm"] = new_ssm
+        elif cfg.attn_kind == "mla":
+            ckv_new, krope_new = L.mla_latents(p["attn"], h, cfg,
+                                               (new_len - 1)[:, None])
+            new_c["c_kv"] = _insert_seq(
+                c["c_kv"], ckv_new.astype(c["c_kv"].dtype), pos, uniform_pos)
+            new_c["k_rope"] = _insert_seq(
+                c["k_rope"], krope_new.astype(c["k_rope"].dtype), pos,
+                uniform_pos)
+            attn_out = L.mla_attn_decode(p["attn"], h, cfg, window,
+                                         new_c["c_kv"], new_c["k_rope"],
+                                         new_len)
+        elif cfg.attn_kind == "rwkv6":
+            attn_out, new_wkv, new_tm = L.rwkv6_mix_step(
+                p["attn"], h, cfg, c["wkv"], c["tm_prev"])
+            new_c["wkv"] = new_wkv
+            new_c["tm_prev"] = new_tm.astype(c["tm_prev"].dtype)
+        else:
+            raise ValueError(cfg.attn_kind)
+        x = x + attn_out
+
+        h2 = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        if cfg.attn_kind == "rwkv6":
+            mlp_out = L.rwkv_channel_mix(p["mlp"], h2,
+                                         c["cm_prev"][:, None, :])
+            new_c["cm_prev"] = h2[:, 0].astype(c["cm_prev"].dtype)
+        elif cfg.is_moe:
+            mlp_out = L.moe_mlp(p["mlp"], h2, cfg)
+        else:
+            mlp_out = L.swiglu_mlp(p["mlp"], h2)
+        x = x + mlp_out
+        return x, new_c
+
+    x, new_scan_cache = lax.scan(body, x, (params["layers"], windows,
+                                           scan_cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head)[:, 0]
+    new_cache = dict(new_scan_cache)
+    new_cache["lengths"] = new_len
+    return logits, new_cache

@@ -1,0 +1,193 @@
+"""Prefill-skip batched serving engine (paper §5, Fig. 4).
+
+Offline: `build_profiles` prefetches every corpus item through each model
+once, compresses the KV cache at each ladder ratio (Expected Attention),
+and persists the profiles in the CacheStore.
+
+Online: `run_filter` / `run_map` load a profile's caches for a batch of
+items, pad to the max compressed length, *skip prefill entirely*, feed the
+operator query tokens through decode steps, and read out answer-token
+log-odds ('1' vs '0') or a greedy value token + confidence margin.
+
+Batch size is memory-bounded: higher compression -> smaller caches ->
+larger batches -> fewer calls (the paper's batching speedup mechanism).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.compression import (QueryStats, calibrate_query_stats,
+                                     compress_item_cache)
+from repro.cache.store import CacheStore, Profile
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclass
+class EngineModel:
+    cfg: ModelConfig
+    params: Any
+    stats: Optional[QueryStats] = None
+
+
+class ServingEngine:
+    """Executes semantic operators over precomputed KV-cache profiles."""
+
+    def __init__(self, store: CacheStore,
+                 memory_budget_bytes: float = 2e9,
+                 max_batch: int = 128):
+        self.store = store
+        self.models: Dict[str, EngineModel] = {}
+        self.memory_budget = memory_budget_bytes
+        self.max_batch = max_batch
+        self._decode_jit: Dict[str, Any] = {}
+
+    # ---------------- offline phase ----------------
+
+    def register_model(self, name: str, cfg: ModelConfig, params):
+        self.models[name] = EngineModel(cfg, params)
+
+    def build_profiles(self, model_name: str, items: Sequence[Any],
+                       ratios: Sequence[float], prefill_batch: int = 16):
+        """Prefill every item once, compress at every ratio, persist."""
+        em = self.models[model_name]
+        cfg = em.cfg
+        has_cache = cfg.attn_kind != "rwkv6"
+        # calibration on the first few items
+        if has_cache and em.stats is None:
+            calib = _pad_tokens([it.tokens for it in items[:8]])
+            em.stats = calibrate_query_stats(em.params, cfg, tokens=calib)
+        for start in range(0, len(items), prefill_batch):
+            chunk = items[start:start + prefill_batch]
+            toks = _pad_tokens([it.tokens for it in chunk])
+            lengths = jnp.asarray([len(it.tokens) for it in chunk],
+                                  jnp.int32)
+            _, cache = prefill(em.params, cfg, tokens=toks,
+                               max_len=toks.shape[1], lengths=lengths)
+            for bi, it in enumerate(chunk):
+                item_cache = jax.tree.map(_take_item(bi), cache)
+                n = int(lengths[bi])
+                for ratio in ratios:
+                    if not has_cache and ratio > 0:
+                        continue     # rwkv6: no ladder (DESIGN.md)
+                    if has_cache:
+                        arrays, new_len = compress_item_cache(
+                            cfg, item_cache, em.stats, ratio, n)
+                    else:
+                        arrays = {k: np.asarray(v[:, 0]) for k, v in
+                                  item_cache.items() if k != "lengths"}
+                        new_len = n
+                    self.store.save(Profile(model_name, ratio), it.item_id,
+                                    arrays, new_len)
+
+    # ---------------- online phase ----------------
+
+    def _batch_size(self, profile: Profile, item_ids) -> int:
+        shard = self.store.load(profile, item_ids[0])
+        per_item = sum(a.nbytes for k, a in shard.items()
+                       if k != "__length__")
+        b = max(1, int(self.memory_budget / max(per_item, 1)))
+        return min(b, self.max_batch, len(item_ids))
+
+    def _decode_fn(self, model_name: str):
+        if model_name not in self._decode_jit:
+            em = self.models[model_name]
+
+            def run_tokens(params, cache, tokens):
+                """Feed tokens (B, L) sequentially; return final logits."""
+                def step(cache, tok):
+                    logits, cache = decode_step(params, em.cfg, cache,
+                                                tokens=tok[:, None])
+                    return cache, logits
+                cache, logits_seq = jax.lax.scan(
+                    step, cache, jnp.moveaxis(tokens, 1, 0))
+                return logits_seq[-1], cache
+
+            self._decode_jit[model_name] = jax.jit(run_tokens)
+        return self._decode_jit[model_name]
+
+    def run_filter(self, model_name: str, profile_ratio: float,
+                   item_ids: Sequence[int], query_tokens: Sequence[int],
+                   yes_token: int, no_token: int) -> np.ndarray:
+        """Log-odds per item: logit(yes) - logit(no), prefill skipped."""
+        em = self.models[model_name]
+        profile = Profile(model_name, profile_ratio)
+        out = np.zeros(len(item_ids), np.float32)
+        bs = self._batch_size(profile, item_ids)
+        fn = self._decode_fn(model_name)
+        for s in range(0, len(item_ids), bs):
+            ids = list(item_ids[s:s + bs])
+            pad = _bucket(len(ids)) - len(ids)     # shape-bucketed batches
+            cache, _ = self.store.load_batch(
+                em.cfg, profile, ids + ids[:1] * pad,
+                headroom=len(query_tokens) + 2)
+            q = jnp.asarray([list(query_tokens)] * (len(ids) + pad),
+                            jnp.int32)
+            logits, _ = fn(em.params, cache, q)
+            lo = np.asarray(logits[:, yes_token] - logits[:, no_token],
+                            np.float32)
+            out[s:s + len(ids)] = lo[:len(ids)]
+        return out
+
+    def run_map(self, model_name: str, profile_ratio: float,
+                item_ids: Sequence[int], query_tokens: Sequence[int],
+                value_tokens: Sequence[int]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Greedy value among `value_tokens` + confidence (logit margin)."""
+        em = self.models[model_name]
+        profile = Profile(model_name, profile_ratio)
+        vals = np.zeros(len(item_ids), np.int64)
+        confs = np.zeros(len(item_ids), np.float32)
+        bs = self._batch_size(profile, item_ids)
+        fn = self._decode_fn(model_name)
+        vt = jnp.asarray(list(value_tokens))
+        for s in range(0, len(item_ids), bs):
+            ids = list(item_ids[s:s + bs])
+            pad = _bucket(len(ids)) - len(ids)
+            cache, _ = self.store.load_batch(
+                em.cfg, profile, ids + ids[:1] * pad,
+                headroom=len(query_tokens) + 2)
+            q = jnp.asarray([list(query_tokens)] * (len(ids) + pad),
+                            jnp.int32)
+            logits, _ = fn(em.params, cache, q)
+            vlogits = logits[:, vt]                        # (B, n_vals)
+            top2 = jax.lax.top_k(vlogits, 2)[0]
+            vals[s:s + len(ids)] = np.asarray(
+                vt[jnp.argmax(vlogits, -1)])[:len(ids)]
+            confs[s:s + len(ids)] = np.asarray(
+                top2[:, 0] - top2[:, 1])[:len(ids)]
+        return vals, confs
+
+
+def _bucket(n: int) -> int:
+    """Round batch size up to a power of two: bounded jit-shape diversity
+    across cascade stages (dispatch overhead, not semantics)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def _take_item(bi: int):
+    def f(leaf):
+        if leaf.ndim == 1:           # lengths
+            return leaf[bi:bi + 1]
+        return leaf[:, bi:bi + 1]    # (L, B, ...)
+    return f
+
+
+def _pad_tokens(token_lists: Sequence[Sequence[int]],
+                multiple: int = 16) -> jnp.ndarray:
+    n = max(len(t) for t in token_lists)
+    n = (n + multiple - 1) // multiple * multiple
+    out = np.zeros((len(token_lists), n), np.int32)
+    for i, t in enumerate(token_lists):
+        out[i, :len(t)] = t
+    return jnp.asarray(out)

@@ -1,0 +1,147 @@
+"""Physical operator implementations against the serving engine.
+
+The registry produced by `make_registry` is what the planner/profiler
+consume: for every semantic operator it returns the cascade candidates in
+cost order, gold last:
+
+  filters: [embedding filter, sm @ high-comp ... lg @ comp ..., lg @ 0 = gold]
+  maps:    [python extractor, sm ladder ..., lg ladder ..., lg @ 0 = gold]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.logical import SemFilter, SemMap
+from repro.core.physical import PhysicalOperator
+from repro.data.synthetic import (N_VALUES, TOK_NO, TOK_YES, Item,
+                                  filter_query_token, filter_signal_token,
+                                  map_query_token, map_signal_token,
+                                  value_token)
+from repro.serving.engine import ServingEngine
+
+
+class KVCacheLLMOperator(PhysicalOperator):
+    """The paper's contribution: LLM operator over a precomputed
+    (compressed) KV-cache profile — prefill skipped."""
+
+    uses_llm = True
+
+    def __init__(self, engine: ServingEngine, model_name: str, ratio: float,
+                 is_gold: bool = False):
+        self.engine = engine
+        self.model_name = model_name
+        self.ratio = ratio
+        self.is_gold = is_gold
+        self.name = f"{model_name}-kv{int(round(ratio * 100)):02d}"
+
+    def run_filter(self, items: Sequence[Item], op: SemFilter) -> np.ndarray:
+        ids = [it.item_id for it in items]
+        return self.engine.run_filter(
+            self.model_name, self.ratio, ids,
+            [filter_query_token(op.task_id)], TOK_YES, TOK_NO)
+
+    def run_map(self, items: Sequence[Item], op: SemMap):
+        ids = [it.item_id for it in items]
+        vals, conf = self.engine.run_map(
+            self.model_name, self.ratio, ids, [map_query_token(op.task_id)],
+            [value_token(v) for v in range(N_VALUES)])
+        return vals, conf
+
+    def cost_model(self) -> float:
+        d = self.engine.models[self.model_name].cfg.d_model
+        return d ** 2 * (1.0 - 0.6 * self.ratio)
+
+
+class EmbeddingFilterOperator(PhysicalOperator):
+    """BLIP-style embedding similarity filter: cosine between the item's
+    mean token embedding and the task's signal direction. No LLM call."""
+
+    uses_llm = False
+    is_gold = False
+
+    def __init__(self, engine: ServingEngine, model_name: str):
+        self.engine = engine
+        self.model_name = model_name
+        self.name = f"emb-{model_name}"
+
+    def run_filter(self, items: Sequence[Item], op: SemFilter) -> np.ndarray:
+        E = np.asarray(self.engine.models[self.model_name].params["embed"])
+        # probe direction: mean difference of the task's yes/no signal
+        # token embeddings (a calibrated contrastive probe)
+        yes = np.mean([E[filter_signal_token(op.task_id, 1, i)]
+                       for i in range(4)], axis=0)
+        no = np.mean([E[filter_signal_token(op.task_id, 0, i)]
+                      for i in range(4)], axis=0)
+        probe = yes - no
+        probe /= np.linalg.norm(probe) + 1e-9
+        out = np.zeros(len(items), np.float32)
+        for i, it in enumerate(items):
+            v = E[np.asarray(it.tokens)].mean(0)
+            out[i] = 8.0 * float(v @ probe / (np.linalg.norm(v) + 1e-9))
+        return out
+
+    def cost_model(self) -> float:
+        return 1.0
+
+
+class PythonMapOperator(PhysicalOperator):
+    """Generated-code extractor: counts value-token occurrences. Only knows
+    the corpus conventions partially (it cannot see attention-composed
+    evidence), so it is decisive on easy items and unsure otherwise."""
+
+    uses_llm = False
+    is_gold = False
+
+    def __init__(self):
+        self.name = "python-map"
+
+    def run_filter(self, items, op):
+        raise NotImplementedError
+
+    def run_map(self, items: Sequence[Item], op: SemMap):
+        vals = np.zeros(len(items), np.int64)
+        conf = np.zeros(len(items), np.float32)
+        for i, it in enumerate(items):
+            counts = np.zeros(N_VALUES)
+            for t in it.tokens:
+                for v in range(N_VALUES):
+                    if t == map_signal_token(op.task_id, v):
+                        counts[v] += 1
+            order = np.argsort(counts)[::-1]
+            vals[i] = value_token(int(order[0]))
+            conf[i] = float(counts[order[0]] - counts[order[1]])
+        return vals, conf
+
+    def cost_model(self) -> float:
+        return 0.5
+
+
+def make_registry(engine: ServingEngine, *, sm: str = "sm", lg: str = "lg",
+                  sm_ratios=(0.8, 0.5, 0.0), lg_ratios=(0.8, 0.5, 0.3),
+                  include_cheap: bool = True):
+    """Build the semantic-op -> cascade-candidates registry (gold last)."""
+
+    def registry(op) -> List[PhysicalOperator]:
+        ops: List[PhysicalOperator] = []
+        if isinstance(op, SemFilter):
+            if include_cheap:
+                ops.append(EmbeddingFilterOperator(engine, sm))
+            for r in sm_ratios:
+                ops.append(KVCacheLLMOperator(engine, sm, r))
+            for r in lg_ratios:
+                ops.append(KVCacheLLMOperator(engine, lg, r))
+            ops.append(KVCacheLLMOperator(engine, lg, 0.0, is_gold=True))
+        else:
+            if include_cheap:
+                ops.append(PythonMapOperator())
+            for r in sm_ratios:
+                ops.append(KVCacheLLMOperator(engine, sm, r))
+            for r in lg_ratios:
+                ops.append(KVCacheLLMOperator(engine, lg, r))
+            ops.append(KVCacheLLMOperator(engine, lg, 0.0, is_gold=True))
+        return ops
+
+    return registry

@@ -1,0 +1,112 @@
+"""Pure-JAX AdamW with optional error-feedback int8 gradient compression.
+
+Optimizer moments are kept in f32 regardless of param dtype; under the
+production mesh they are additionally sharded over the `data` axis
+(ZeRO-1) — see `opt_state_axes`.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: PyTree                # f32, like params
+    v: PyTree                # f32, like params
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree, *,
+                 lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 ) -> Tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v)
+
+
+def opt_state_axes(params_axes: PyTree) -> "AdamWState":
+    """Logical axes for AdamWState (ZeRO-1): the moments replace the
+    weights' 'fsdp' logical axis with 'opt_fsdp', so optimizer state can be
+    sharded over the data axis even when the weights themselves are
+    replicated across it (classic ZeRO-1: no per-layer weight gathers in
+    fwd/bwd, sharded Adam update, one params all-gather per step)."""
+    def swap(axes):
+        return tuple("opt_fsdp" if a == "fsdp" else a for a in axes)
+
+    mapped = jax.tree.map(
+        swap, params_axes,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(x, (str, type(None))) for x in v))
+    return AdamWState(step=(), m=mapped, v=mapped)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback int8 gradient compression (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+def compress_grads(grads: PyTree, residual: Optional[PyTree]):
+    """Quantize grads to int8 with per-tensor scale + error feedback.
+
+    Returns (q_grads, scales, new_residual). The all-reduce then moves 4x
+    fewer bytes; the residual keeps the quantization error for the next step
+    (Seide et al. 1-bit SGD generalization).
+    """
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                grads)
+
+    def q(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        qg = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_r = g - qg.astype(jnp.float32) * scale
+        return qg, scale, new_r
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [q(g, r) for g, r in zip(flat, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+            treedef.unflatten([o[2] for o in out]))
+
+
+def decompress_grads(q_grads: PyTree, scales: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda qg, s: qg.astype(jnp.float32) * s, q_grads, scales)

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests see the real device count (1); only the dry-run forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,62 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bounds as B
+
+
+def test_betaincinv_inverts_betainc():
+    from jax.scipy.special import betainc
+    a = jnp.array([2.0, 5.0, 91.0, 1.0])
+    b = jnp.array([3.0, 1.0, 11.0, 1.0])
+    q = jnp.array([0.05, 0.5, 0.95, 0.3])
+    x = B.betaincinv(a, b, q)
+    np.testing.assert_allclose(np.asarray(betainc(a, b, x)), np.asarray(q),
+                               atol=1e-6)
+
+
+def test_known_quantile():
+    # Beta(91, 11) 5th percentile ~ 0.8378 (checked against scipy offline)
+    lb = float(B.recall_lower_bound(90.0, 10.0, 0.95))
+    assert abs(lb - 0.8378) < 2e-3
+
+
+def test_bound_below_point_estimate():
+    lb = float(B.recall_lower_bound(50.0, 50.0, 0.95))
+    assert lb < 0.5
+    lb99 = float(B.recall_lower_bound(50.0, 50.0, 0.99))
+    assert lb99 < lb            # stricter credibility -> lower bound
+
+
+def test_gradients():
+    g_tp = float(jax.grad(
+        lambda tp: B.recall_lower_bound(tp, 10.0, 0.95))(90.0))
+    g_fn = float(jax.grad(
+        lambda fn: B.recall_lower_bound(90.0, fn, 0.95))(10.0))
+    assert g_tp > 0 and g_fn < 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(tp=st.floats(0.0, 500.0), fn=st.floats(0.0, 500.0))
+def test_bound_in_unit_interval(tp, fn):
+    lb = float(B.recall_lower_bound(tp, fn, 0.95))
+    assert 0.0 <= lb <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(tp=st.floats(1.0, 200.0), fn=st.floats(0.0, 200.0),
+       extra=st.floats(0.5, 50.0))
+def test_bound_monotone_in_tp(tp, fn, extra):
+    l1 = float(B.recall_lower_bound(tp, fn, 0.95))
+    l2 = float(B.recall_lower_bound(tp + extra, fn, 0.95))
+    assert l2 >= l1 - 1e-6
+
+
+def test_more_data_tightens_bound():
+    # same empirical rate, 10x the evidence -> tighter bound
+    l_small = float(B.recall_lower_bound(9.0, 1.0, 0.95))
+    l_big = float(B.recall_lower_bound(90.0, 10.0, 0.95))
+    assert l_big > l_small

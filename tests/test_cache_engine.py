@@ -1,0 +1,108 @@
+"""KV-cache compression ladder + serving engine end-to-end behavior."""
+import numpy as np
+import pytest
+
+from repro.cache.compression import prune_dominated
+from repro.cache.store import CacheStore, Profile
+from repro.data.synthetic import (TOK_NO, TOK_YES, filter_query_token,
+                                  make_dataset, make_planted_params,
+                                  map_query_token, planted_config,
+                                  value_token)
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    ds = make_dataset("t", 80, seed=11)
+    store = CacheStore(str(tmp_path_factory.mktemp("cache")))
+    eng = ServingEngine(store)
+    for size in ("sm", "lg"):
+        cfg = planted_config(size)
+        eng.register_model(size, cfg, make_planted_params(cfg, seed=1))
+        eng.build_profiles(size, ds.items, ratios=[0.0, 0.5, 0.8],
+                           prefill_batch=40)
+    return eng, ds
+
+
+def test_compressed_lengths(engine):
+    eng, ds = engine
+    s0 = eng.store.load(Profile("lg", 0.0), 0)
+    s5 = eng.store.load(Profile("lg", 0.5), 0)
+    s8 = eng.store.load(Profile("lg", 0.8), 0)
+    n = len(ds.items[0].tokens)
+    assert int(s0["__length__"]) == n
+    assert int(s5["__length__"]) == max(4, round(0.5 * n))
+    assert int(s8["__length__"]) == max(4, round(0.2 * n))
+    # cache arrays shrink accordingly
+    assert s5["k"].shape[1] < s0["k"].shape[1]
+    assert s8["k"].shape[1] < s5["k"].shape[1]
+
+
+def test_storage_shrinks_with_ratio(engine):
+    eng, _ = engine
+    b0 = eng.store.storage_bytes(Profile("lg", 0.0))
+    b8 = eng.store.storage_bytes(Profile("lg", 0.8))
+    assert b8 < 0.4 * b0
+
+
+def test_quality_ladder_model_size(engine):
+    """Gold (lg, r=0) must beat the small model on the planted filters."""
+    eng, ds = engine
+    ids = [it.item_id for it in ds.items]
+    accs = {}
+    for size in ("sm", "lg"):
+        lo = eng.run_filter(size, 0.0, ids, [filter_query_token(1)],
+                            TOK_YES, TOK_NO)
+        labels = np.array([it.labels[1] for it in ds.items])
+        accs[size] = ((lo > 0) == labels).mean()
+    assert accs["lg"] > accs["sm"]
+    assert accs["lg"] > 0.8
+
+
+def test_quality_ladder_compression(engine):
+    """Aggressive compression must hurt lg filter accuracy (the token-drop
+    mechanism is real, not simulated)."""
+    eng, ds = engine
+    ids = [it.item_id for it in ds.items]
+    labels = np.array([it.labels[1] for it in ds.items])
+    acc = {}
+    for r in (0.0, 0.8):
+        lo = eng.run_filter("lg", r, ids, [filter_query_token(1)],
+                            TOK_YES, TOK_NO)
+        acc[r] = ((lo > 0) == labels).mean()
+    assert acc[0.8] < acc[0.0]
+
+
+def test_map_values(engine):
+    eng, ds = engine
+    ids = [it.item_id for it in ds.items]
+    vals, conf = eng.run_map("lg", 0.0, ids, [map_query_token(2)],
+                             [value_token(v) for v in range(8)])
+    want = np.array([value_token(it.map_vals[2]) for it in ds.items])
+    assert (vals == want).mean() > 0.9
+    assert (conf > 0).all()
+
+
+def test_padded_batching_consistent(engine):
+    """Results must not depend on batch composition (padding is masked)."""
+    eng, ds = engine
+    ids = [it.item_id for it in ds.items[:16]]
+    full = eng.run_filter("lg", 0.5, ids, [filter_query_token(3)],
+                          TOK_YES, TOK_NO)
+    solo = np.concatenate(
+        [eng.run_filter("lg", 0.5, [i], [filter_query_token(3)],
+                        TOK_YES, TOK_NO) for i in ids])
+    np.testing.assert_allclose(full, solo, atol=2e-3)
+
+
+def test_prune_dominated():
+    profiles = [
+        {"ratio": 0.0, "quality": 0.95, "cost": 10.0},
+        {"ratio": 0.3, "quality": 0.94, "cost": 8.0},
+        {"ratio": 0.5, "quality": 0.80, "cost": 9.0},   # dominated by r=.3
+        {"ratio": 0.8, "quality": 0.60, "cost": 3.0},
+    ]
+    kept = prune_dominated(profiles)
+    ratios = {p["ratio"] for p in kept}
+    assert 0.5 not in ratios
+    assert {0.0, 0.3, 0.8} <= ratios

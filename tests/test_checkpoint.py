@@ -1,0 +1,141 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as CKPT
+from repro.training.loop import LoopConfig, run_training
+from repro.training.optimizer import (adamw_init, adamw_update,
+                                      compress_grads, decompress_grads)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "b": {"c": jnp.arange(10, dtype=jnp.int32),
+                  "d": jax.random.normal(k, (3,)).astype(jnp.bfloat16)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    CKPT.save_checkpoint(str(tmp_path), 7, t)
+    restored, step = CKPT.restore_checkpoint(str(tmp_path), t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        CKPT.save_checkpoint(str(tmp_path), s, t, keep_last=2)
+    assert CKPT.latest_step(str(tmp_path)) == 5
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    path = CKPT.save_checkpoint(str(tmp_path), 1, t)
+    victim = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(path, victim))
+    np.save(os.path.join(path, victim), arr + 1)
+    with pytest.raises(IOError):
+        CKPT.restore_checkpoint(str(tmp_path), t)
+
+
+def test_no_partial_checkpoint_on_crash(tmp_path):
+    """tmp dirs from interrupted writes must never be listed as steps."""
+    os.makedirs(tmp_path / ".tmp_ckpt_dead")
+    assert CKPT.latest_step(str(tmp_path)) is None
+
+
+def test_loop_resume_and_failure_injection(tmp_path):
+    """Train 10 steps with a ckpt every 4; crash at step 7; rerun: the loop
+    resumes from step 4 (not 0) and finishes; injected transient failures
+    are retried."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.training.train_step import make_train_step
+
+    cfg = get_config("granite-8b").reduced(n_layers=1, d_model=32,
+                                           n_heads=2, n_kv_heads=2,
+                                           d_head=16, d_ff=32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step_fn = make_train_step(cfg, remat=False)
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (2, 16)), jnp.int32)} for _ in range(12)]
+
+    boom = {"armed": True}
+
+    def injector(step):
+        if step == 7 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated preemption")
+
+    cfg_loop = LoopConfig(total_steps=10, ckpt_every=4,
+                          ckpt_dir=str(tmp_path))
+    p1, o1, rep1 = run_training(step_fn, params, opt, batches, cfg_loop,
+                                failure_injector=injector)
+    assert rep1.steps_run == 10
+    assert rep1.retries == 1            # the injected failure was retried
+
+    # second run resumes from the last checkpoint, not from scratch
+    p2, o2, rep2 = run_training(step_fn, params, opt, batches,
+                                LoopConfig(total_steps=10, ckpt_every=4,
+                                           ckpt_dir=str(tmp_path)))
+    assert rep2.resumed_from == 8
+    assert rep2.steps_run == 2
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore under a different device layout (1-device mesh here; the
+    same code path reshards to any production mesh)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    CKPT.save_checkpoint(str(tmp_path), 3, t)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shardings = {"w": NamedSharding(mesh, P("data", "model"))}
+    restored, _ = CKPT.restore_checkpoint(str(tmp_path), t,
+                                          shardings=shardings)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(t["w"]))
+    assert restored["w"].sharding == shardings["w"]
+
+
+def test_gradient_compression_error_feedback():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                          jnp.float32)}
+    q, scales, resid = compress_grads(g, None)
+    assert q["w"].dtype == jnp.int8
+    deq = decompress_grads(q, scales)
+    err1 = float(jnp.max(jnp.abs(deq["w"] - g["w"])))
+    assert err1 < float(scales["w"]) + 1e-6
+    # residual carries exactly the quantization error
+    np.testing.assert_allclose(np.asarray(resid["w"]),
+                               np.asarray(g["w"] - deq["w"]), atol=1e-6)
+
+
+def test_adamw_decreases_loss():
+    rng = np.random.default_rng(0)
+    w_true = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    y = x @ w_true
+    params = {"w": jnp.zeros(8)}
+    opt = adamw_init(params)
+
+    def loss_fn(p):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    l0 = float(loss_fn(params))
+    for _ in range(60):
+        g = jax.grad(loss_fn)(params)
+        params, opt = adamw_update(g, opt, params, lr=0.05,
+                                   weight_decay=0.0)
+    assert float(loss_fn(params)) < 0.1 * l0

@@ -1,0 +1,79 @@
+"""Gradient planner behavior on controlled synthetic pipelines."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import relaxation as R
+from repro.core.optimizer import PlannerConfig, optimize_query
+
+CFG = PlannerConfig(steps=200, restarts=3, snapshots=3)
+
+
+def _world(seed=0, N=300):
+    rng = np.random.default_rng(seed)
+    true = rng.random(N) < 0.4
+    gold = np.where(true, 3.0, -3.0) + rng.normal(0, 0.3, N)
+    cheap = np.where(true, 1.0, -1.0) + rng.normal(0, 0.8, N)
+    mid = np.where(true, 2.0, -2.0) + rng.normal(0, 0.5, N)
+    data = R.PipelineData(
+        scores=jnp.asarray(np.stack([cheap, mid, gold]), jnp.float32),
+        costs=jnp.asarray([0.01, 0.1, 1.0]), is_map=False)
+    return data, (gold > 0).astype(np.float32)
+
+
+def test_cost_monotone_in_target():
+    data, g = _world()
+    costs = []
+    for tgt in (0.6, 0.9):
+        plan = optimize_query([data], g, tgt, tgt, CFG)
+        assert plan.feasible
+        costs.append(plan.est_cost)
+    assert costs[0] <= costs[1] + 1e-6      # looser target -> cheaper plan
+
+
+def test_bounds_exceed_targets_when_feasible():
+    data, g = _world()
+    plan = optimize_query([data], g, 0.8, 0.8, CFG)
+    assert plan.feasible
+    assert plan.recall_bound >= 0.8
+    assert plan.precision_bound >= 0.8
+
+
+def test_infeasible_falls_back_to_gold():
+    data, g = _world(N=40)       # tiny sample: 0.99 is uncertifiable
+    plan = optimize_query([data], g, 0.99, 0.99, CFG)
+    assert not plan.feasible
+    assert plan.selected[0][-1]            # gold on
+    assert not plan.selected[0][:-1].any()  # everything else off
+
+
+def test_cascade_beats_gold_only_cost():
+    data, g = _world()
+    plan = optimize_query([data], g, 0.7, 0.7, CFG)
+    gold_cost = 300 * 1.0
+    assert plan.feasible
+    assert plan.est_cost < 0.5 * gold_cost
+
+
+def test_multi_filter_budget_reallocation():
+    """One easy + one hard logical filter: the optimizer should spend the
+    error budget on the hard one (paper's central motivation)."""
+    rng = np.random.default_rng(1)
+    N = 300
+    t1 = rng.random(N) < 0.5
+    t2 = rng.random(N) < 0.5
+    easy_gold = np.where(t1, 4.0, -4.0) + rng.normal(0, 0.1, N)
+    easy_cheap = np.where(t1, 2.0, -2.0) + rng.normal(0, 0.2, N)  # v good
+    hard_gold = np.where(t2, 3.0, -3.0) + rng.normal(0, 0.4, N)
+    hard_cheap = np.where(t2, 0.5, -0.5) + rng.normal(0, 1.0, N)  # bad
+    d1 = R.PipelineData(jnp.asarray(np.stack([easy_cheap, easy_gold]),
+                                    jnp.float32),
+                        jnp.asarray([0.01, 1.0]), False)
+    d2 = R.PipelineData(jnp.asarray(np.stack([hard_cheap, hard_gold]),
+                                    jnp.float32),
+                        jnp.asarray([0.01, 1.0]), False)
+    g = ((easy_gold > 0) & (hard_gold > 0)).astype(np.float32)
+    plan = optimize_query([d1, d2], g, 0.85, 0.85, CFG)
+    assert plan.feasible
+    # global plan must be cheaper than running both golds on everything
+    assert plan.est_cost < 2.0 * N * 0.9

@@ -1,0 +1,91 @@
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ordering import PhysOp, greedy_order, reorder
+
+
+def _simulate(order, ops_by_id, n_logical, n):
+    counts = [float(n)] * n_logical
+    total = 0.0
+    for oid in order:
+        o = ops_by_id[oid]
+        total += o.cost * counts[o.logical_id]
+        for l in range(n_logical):
+            counts[l] *= o.sel_intra if l == o.logical_id else o.sel_inter
+    return total
+
+
+def _random_instance(rng, n_logical=2, stages=2):
+    ops = []
+    for l in range(n_logical):
+        for s in range(stages):
+            ops.append(PhysOp(
+                op_id=len(ops), logical_id=l, stage=s,
+                cost=float(rng.uniform(0.01, 1.0) * (s + 1)),
+                sel_inter=float(rng.uniform(0.3, 1.0)),
+                sel_intra=float(rng.uniform(0.05, 0.9))))
+    return ops
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dp_beats_brute_force(seed):
+    """DP result equals the best order found by exhaustive enumeration
+    (respecting cascade stage precedence)."""
+    rng = np.random.default_rng(seed)
+    ops = _random_instance(rng)
+    ops_by_id = {o.op_id: o for o in ops}
+    n = 100.0
+    order, cost = reorder(ops, n)
+    assert sorted(order) == sorted(o.op_id for o in ops)
+
+    best = np.inf
+    for perm in itertools.permutations(range(len(ops))):
+        seen_stage = {}
+        ok = True
+        for oid in perm:
+            o = ops_by_id[oid]
+            if o.stage != seen_stage.get(o.logical_id, 0):
+                ok = False
+                break
+            seen_stage[o.logical_id] = o.stage + 1
+        if not ok:
+            continue
+        best = min(best, _simulate(perm, ops_by_id, 2, n))
+    sim = _simulate(order, ops_by_id, 2, n)
+    assert sim <= best * (1 + 1e-9)
+    assert abs(cost - sim) / max(sim, 1e-9) < 1e-6
+
+
+def test_cheap_filtering_op_goes_first():
+    ops = [
+        PhysOp(0, 0, 0, cost=0.01, sel_inter=0.2, sel_intra=0.1),
+        PhysOp(1, 1, 0, cost=1.0, sel_inter=0.9, sel_intra=0.2),
+    ]
+    order, _ = reorder(ops, 100)
+    assert order[0] == 0
+
+
+def test_greedy_respects_stage_order():
+    rng = np.random.default_rng(0)
+    ops = _random_instance(rng, n_logical=3, stages=3)
+    order, _ = greedy_order(ops, 500)
+    seen = {}
+    for oid in order:
+        o = next(x for x in ops if x.op_id == oid)
+        assert o.stage == seen.get(o.logical_id, 0)
+        seen[o.logical_id] = o.stage + 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dp_no_worse_than_greedy(seed):
+    rng = np.random.default_rng(seed)
+    ops = _random_instance(rng, n_logical=2, stages=3)
+    _, c_dp = reorder(ops, 200)
+    _, c_gr = greedy_order(ops, 200)
+    assert c_dp <= c_gr + 1e-9

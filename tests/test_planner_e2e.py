@@ -1,0 +1,108 @@
+"""Planner + executor end-to-end on the planted corpus, plus baselines."""
+import numpy as np
+import pytest
+
+from repro.cache.store import CacheStore
+from repro.core import (PlannerConfig, Query, RelFilter, SemFilter, SemMap,
+                        evaluate_vs_gold, execute_plan, plan_query)
+from repro.core.baselines import (plan_lotus, plan_pareto_cascades,
+                                  plan_stretto_local)
+from repro.core.physical import PhysicalPlan, PhysicalPlanStage
+from repro.data.synthetic import (make_dataset, make_planted_params,
+                                  planted_config)
+from repro.serving.engine import ServingEngine
+from repro.serving.operators import make_registry
+
+FAST = PlannerConfig(steps=150, restarts=2, snapshots=3)
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    ds = make_dataset("t", 160, seed=5)
+    store = CacheStore(str(tmp_path_factory.mktemp("cache")))
+    eng = ServingEngine(store)
+    for size in ("sm", "lg"):
+        cfg = planted_config(size)
+        eng.register_model(size, cfg, make_planted_params(cfg, seed=1))
+        eng.build_profiles(size, ds.items, ratios=[0.0, 0.3, 0.5, 0.8],
+                           prefill_batch=40)
+    registry = make_registry(eng)
+    return ds, registry
+
+
+def _gold_plan(query, registry):
+    stages = []
+    for li, op in enumerate(query.semantic_ops):
+        ops = registry(op)
+        stages.append(PhysicalPlanStage(
+            li, 0, ops[-1].name, 0.0, 0.0,
+            op.__class__.__name__ == "SemMap", True, 1.0))
+    return PhysicalPlan(stages, [], 0.0, 1.0, 1.0, True)
+
+
+def test_plan_and_execute_meets_targets(world):
+    ds, registry = world
+    q = Query([SemFilter("f1", 1), SemFilter("f4", 4)],
+              target_recall=0.7, target_precision=0.7)
+    gold = execute_plan(_gold_plan(q, registry), q, ds.items, registry)
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.3)
+    res = execute_plan(plan, q, ds.items, registry)
+    m = evaluate_vs_gold(res, gold, q.semantic_ops)
+    if plan.feasible:
+        # executed quality should respect the planner's (credible) bounds
+        # most of the time; being a statistical guarantee, leave headroom
+        assert m["recall"] >= 0.55
+        assert m["precision"] >= 0.55
+    assert res.runtime_s <= gold.runtime_s * 1.5
+
+
+def test_relational_pullup(world):
+    ds, registry = world
+    q = Query([SemFilter("f2", 2), RelFilter("category", "==", "news")],
+              target_recall=0.6, target_precision=0.6)
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.3)
+    assert len(plan.relational) == 1
+    res = execute_plan(plan, q, ds.items, registry)
+    cats = np.array([it.row["category"] == "news" for it in ds.items])
+    assert not (res.accepted & ~cats).any()
+
+
+def test_map_pipeline(world):
+    ds, registry = world
+    q = Query([SemMap("extract v3", 3)], target_recall=0.7,
+              target_precision=0.7)
+    gold = execute_plan(_gold_plan(q, registry), q, ds.items, registry)
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.3)
+    res = execute_plan(plan, q, ds.items, registry)
+    m = evaluate_vs_gold(res, gold, q.semantic_ops)
+    assert m["recall"] > 0.5
+
+
+def test_lotus_baseline_structure(world):
+    ds, registry = world
+    q = Query([SemFilter("f1", 1), SemFilter("f2", 2)],
+              target_recall=0.7, target_precision=0.7)
+    plan = plan_lotus(q, ds.items, registry, sample_frac=0.3)
+    # 2 logical ops x (small + gold)
+    assert len(plan.stages) == 4
+    assert sum(s.is_gold for s in plan.stages) == 2
+    res = execute_plan(plan, q, ds.items, registry)
+    assert res.accepted.dtype == bool
+
+
+def test_pareto_baseline_runs(world):
+    ds, registry = world
+    q = Query([SemFilter("f5", 5)], target_recall=0.6,
+              target_precision=0.6)
+    plan = plan_pareto_cascades(q, ds.items, registry, sample_frac=0.3)
+    res = execute_plan(plan, q, ds.items, registry)
+    assert res.runtime_s > 0
+
+
+def test_stretto_local_ablation(world):
+    ds, registry = world
+    q = Query([SemFilter("f1", 1), SemFilter("f6", 6)],
+              target_recall=0.6, target_precision=0.6)
+    plan = plan_stretto_local(q, ds.items, registry, FAST, sample_frac=0.3)
+    res = execute_plan(plan, q, ds.items, registry)
+    assert res.runtime_s > 0

@@ -1,0 +1,101 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import relaxation as R
+
+
+def _random_pipeline(rng, n_ops=3, N=40, is_map=False):
+    scores = rng.normal(size=(n_ops, N)).astype(np.float32)
+    costs = np.sort(rng.uniform(0.01, 1.0, n_ops)).astype(np.float32)
+    correct = (rng.random((n_ops, N)) < 0.7).astype(np.float32)
+    if is_map:
+        correct[-1] = 1.0
+    return R.PipelineData(jnp.asarray(scores), jnp.asarray(costs), is_map,
+                          jnp.asarray(correct) if is_map else None)
+
+
+def _random_params(rng, n_ops=3):
+    return R.PipelineParams(
+        jnp.asarray(rng.normal(size=n_ops).astype(np.float32)),
+        jnp.asarray(rng.normal(size=n_ops).astype(np.float32)),
+        jnp.asarray(rng.normal(size=n_ops).astype(np.float32)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), tau=st.floats(0.05, 2.0))
+def test_accept_in_unit_interval(seed, tau):
+    rng = np.random.default_rng(seed)
+    data = _random_pipeline(rng)
+    params = _random_params(rng)
+    acc, cost, dec = R.simulate_pipeline(params, data, tau)
+    assert float(jnp.min(acc)) >= -1e-5
+    assert float(jnp.max(acc)) <= 1.0 + 1e-5
+    assert float(jnp.min(cost)) >= -1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_soft_converges_to_hard(seed):
+    """tau -> 0 soft simulation must match the hard (argmax) extraction
+    away from decision boundaries (ties are genuinely ambiguous)."""
+    rng = np.random.default_rng(seed)
+    data = _random_pipeline(rng)
+    params = _random_params(rng)
+    acc_soft, cost_soft, _ = R.simulate_pipeline(params, data, 1e-4,
+                                                 pick_tau=1e-4)
+    acc_hard, cost_hard, _ = R.simulate_pipeline(params, data, 0.0,
+                                                 hard=True)
+    # mask tuples where any op's score sits within eps of a boundary
+    z_acc = np.asarray(data.scores) - np.asarray(params.thr_hi)[:, None]
+    z_rej = np.asarray(params.thr_lo)[:, None] - np.asarray(data.scores)
+    margins = np.minimum.reduce([
+        np.abs(z_acc), np.abs(z_rej), np.abs(z_acc - z_rej),
+        np.abs(np.asarray(data.scores))])
+    clear = (margins > 5e-3).all(axis=0)
+    np.testing.assert_allclose(np.asarray(acc_soft)[clear],
+                               np.asarray(acc_hard)[clear], atol=1e-3)
+
+
+def test_gold_always_decides():
+    rng = np.random.default_rng(0)
+    data = _random_pipeline(rng)
+    # nothing selected except gold
+    params = R.PipelineParams(jnp.asarray([-10.0, -10.0, 10.0]),
+                              jnp.zeros(3), jnp.zeros(3))
+    acc, cost, _ = R.simulate_pipeline(params, data, 0.0, hard=True)
+    gold_acc = np.asarray(data.scores[-1] > 0, np.float32)
+    np.testing.assert_allclose(np.asarray(acc), gold_acc)
+    # cost = everyone pays the gold op
+    np.testing.assert_allclose(np.asarray(cost),
+                               np.full(acc.shape, float(data.costs[-1])),
+                               rtol=1e-5)
+
+
+def test_selecting_cheap_op_reduces_cost():
+    rng = np.random.default_rng(1)
+    data = _random_pipeline(rng)
+    off = R.PipelineParams(jnp.asarray([-10.0, -10.0, 10.0]),
+                           jnp.asarray([0.0, 0.0, 0.0]),
+                           jnp.asarray([0.0, 0.0, 0.0]))
+    on = R.PipelineParams(jnp.asarray([10.0, -10.0, 10.0]),
+                          jnp.asarray([0.5, 0.0, 0.0]),
+                          jnp.asarray([-0.5, 0.0, 0.0]))
+    _, c_off, _ = R.simulate_pipeline(off, data, 0.0, hard=True)
+    _, c_on, _ = R.simulate_pipeline(on, data, 0.0, hard=True)
+    assert float(jnp.sum(c_on)) < float(jnp.sum(c_off))
+
+
+def test_query_counts_consistency():
+    rng = np.random.default_rng(2)
+    d1 = _random_pipeline(rng)
+    d2 = _random_pipeline(rng, is_map=True)
+    p1, p2 = _random_params(rng), _random_params(rng)
+    g = (rng.random(40) < 0.5).astype(np.float32)
+    c = R.query_counts([d1, d2], [p1, p2], jnp.asarray(g), 0.0, hard=True)
+    # TP <= gold positives; FN = gold positives - TP
+    assert float(c.tp) <= g.sum() + 1e-5
+    np.testing.assert_allclose(float(c.tp + c.fn), g.sum(), atol=1e-3)
