@@ -1,35 +1,43 @@
-"""Shared benchmark world: datasets, engine with cache profiles, registry,
-query generation (paper §6.1: templates with 2-4 semantic placeholders),
-and gold-plan execution."""
+"""Shared benchmark world: datasets, engine with cache profiles, runtime
+backends, query generation (paper §6.1: templates with 2-4 semantic
+placeholders), and gold-plan execution through the streaming runtime."""
 from __future__ import annotations
 
-import os
 import tempfile
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.cache.store import CacheStore
-from repro.core import Query, RelFilter, SemFilter, SemMap, execute_plan
-from repro.core.physical import PhysicalPlan, PhysicalPlanStage
+from repro.core import Query, SemFilter, SemMap
+from repro.core.physical import PhysicalPlan
 from repro.data.synthetic import (Dataset, make_dataset, make_planted_params,
                                   paper_datasets, planted_config)
+from repro.runtime import (KVCacheBackend, ReferenceBackend, RuntimeResult,
+                           gold_plan_for)
+from repro.runtime import run_plan as _run_plan
 from repro.serving.engine import ServingEngine
-from repro.serving.operators import make_registry
 
 SM_RATIOS = (0.8, 0.5, 0.0)
 LG_RATIOS = (0.8, 0.6, 0.3)
 ALL_RATIOS = sorted({0.0, *SM_RATIOS, *LG_RATIOS})
+
+# streaming defaults for benchmark executions: bounded working set with
+# engine-friendly coalesced batches (late cascade stages accumulate
+# eligible tuples across partitions until COALESCE are pending)
+PARTITION_SIZE = 256
+COALESCE = 64
 
 
 @dataclass
 class World:
     datasets: Dict[str, Dataset]
     engine: ServingEngine
-    registry: object
-    registry_nocomp: object     # Exp 2 baseline: uncompressed caches only
+    backend: KVCacheBackend           # full compression ladder
+    backend_nocomp: KVCacheBackend    # Exp 2 baseline: uncompressed only
+    reference: ReferenceBackend       # gold (lg @ 0.0) — quality reference
 
 
 def build_world(scale: float = 0.3, cache_dir: str | None = None,
@@ -49,9 +57,11 @@ def build_world(scale: float = 0.3, cache_dir: str | None = None,
                                prefill_batch=48)
         print(f"[world] cache profiles built for {name} "
               f"({len(ds.items)} items, {time.time() - t0:.0f}s elapsed)")
-    registry = make_registry(eng, sm_ratios=SM_RATIOS, lg_ratios=LG_RATIOS)
-    registry_nocomp = make_registry(eng, sm_ratios=(0.0,), lg_ratios=())
-    return World(datasets, eng, registry, registry_nocomp)
+    backend = KVCacheBackend(eng, sm_ratios=SM_RATIOS, lg_ratios=LG_RATIOS)
+    backend_nocomp = KVCacheBackend(eng, sm_ratios=(0.0,), lg_ratios=(),
+                                    include_cheap=True)
+    return World(datasets, eng, backend, backend_nocomp,
+                 ReferenceBackend(eng))
 
 
 def generate_queries(ds: Dataset, n_queries: int, target: float,
@@ -81,17 +91,20 @@ def generate_queries(ds: Dataset, n_queries: int, target: float,
     return out
 
 
-def gold_plan_for(query: Query, registry) -> PhysicalPlan:
-    stages = []
-    for li, op in enumerate(query.semantic_ops):
-        ops = registry(op)
-        stages.append(PhysicalPlanStage(
-            li, 0, ops[-1].name, 0.0, 0.0,
-            isinstance(op, SemMap), True, 1.0))
-    return PhysicalPlan(stages, list(query.relational_ops), 0.0, 1.0, 1.0,
-                        True)
+def execute(plan: PhysicalPlan, query: Query, items, backend,
+            partition_size: Optional[int] = PARTITION_SIZE,
+            coalesce: Optional[int] = COALESCE) -> RuntimeResult:
+    """All benchmark executions go through the streaming runtime."""
+    return _run_plan(plan, query, items, backend,
+                     partition_size=partition_size, coalesce=coalesce)
 
 
-def execute_gold(query: Query, items, registry):
-    return execute_plan(gold_plan_for(query, registry), query, items,
-                        registry)
+def execute_gold(query: Query, items, backend) -> RuntimeResult:
+    """Gold execution; pass World.reference to pin the gold-only backend,
+    or any backend whose candidate lists end in the gold operator."""
+    return execute(gold_plan_for(query, backend), query, items, backend)
+
+
+def stage_stats_rows(tag: str, result: RuntimeResult) -> List[Dict]:
+    """Flatten a result's StageStats for the perf-trajectory artifact."""
+    return [{"tag": tag, **s.as_dict()} for s in result.stage_stats]

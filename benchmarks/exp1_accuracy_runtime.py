@@ -12,9 +12,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import World, execute_gold, generate_queries
-from repro.core import (PlannerConfig, evaluate_vs_gold, execute_plan,
-                        plan_query)
+from benchmarks.common import (World, execute, execute_gold,
+                               generate_queries, stage_stats_rows)
+from repro.core import PlannerConfig, evaluate_vs_gold, plan_query
 from repro.core.baselines import plan_lotus, plan_pareto_cascades
 
 
@@ -28,20 +28,20 @@ def run(world: World, targets=(0.5, 0.7, 0.9), n_queries: int = 4,
             queries = generate_queries(ds, n_queries, target,
                                        seed=hash(ds_name) % 1000)
             for qi, q in enumerate(queries):
-                gold = execute_gold(q, ds.items, world.registry)
+                gold = execute_gold(q, ds.items, world.reference)
                 for method, planner in (
                         ("stretto", lambda q: plan_query(
-                            q, ds.items, world.registry, planner_cfg,
+                            q, ds.items, world.backend, planner_cfg,
                             sample_frac=sample_frac)),
                         ("lotus", lambda q: plan_lotus(
-                            q, ds.items, world.registry,
+                            q, ds.items, world.backend,
                             sample_frac=sample_frac)),
                         ("pareto", lambda q: plan_pareto_cascades(
-                            q, ds.items, world.registry,
+                            q, ds.items, world.backend,
                             sample_frac=sample_frac))):
                     t0 = time.perf_counter()
                     plan = planner(q)
-                    res = execute_plan(plan, q, ds.items, world.registry)
+                    res = execute(plan, q, ds.items, world.backend)
                     m = evaluate_vs_gold(res, gold, q.semantic_ops)
                     rows.append({
                         "dataset": ds_name, "query": qi, "target": target,
@@ -54,7 +54,10 @@ def run(world: World, targets=(0.5, 0.7, 0.9), n_queries: int = 4,
                         "plan_time_s": plan.planning_time_s,
                         "feasible": plan.feasible,
                         "n_llm_tuples": res.n_llm_tuples,
+                        "n_partitions": res.n_partitions,
                         "wall_s": time.perf_counter() - t0,
+                        "stage_stats": stage_stats_rows(
+                            f"exp1/{ds_name}/t{target}/q{qi}/{method}", res),
                     })
     return rows
 

@@ -14,10 +14,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import (LG_RATIOS, SM_RATIOS, World, execute_gold,
-                               generate_queries)
-from repro.core import (PlannerConfig, SemFilter, SemMap, evaluate_vs_gold,
-                        execute_plan, plan_query)
+from benchmarks.common import (LG_RATIOS, SM_RATIOS, World, execute,
+                               generate_queries, stage_stats_rows)
+from repro.core import PlannerConfig, plan_query
 from repro.data.synthetic import (TOK_NO, TOK_YES, filter_query_token,
                                   map_query_token, value_token)
 
@@ -64,12 +63,15 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
             for qi, q in enumerate(queries):
                 rt = {}
                 sel_counter = collections.Counter()
-                for tag, registry in (("full", world.registry),
-                                      ("nocomp", world.registry_nocomp)):
-                    plan = plan_query(q, ds.items, registry, planner_cfg,
+                stats = []
+                for tag, backend in (("full", world.backend),
+                                     ("nocomp", world.backend_nocomp)):
+                    plan = plan_query(q, ds.items, backend, planner_cfg,
                                       sample_frac=sample_frac)
-                    res = execute_plan(plan, q, ds.items, registry)
+                    res = execute(plan, q, ds.items, backend)
                     rt[tag] = res.runtime_s
+                    stats += stage_stats_rows(
+                        f"exp2/{ds_name}/t{target}/q{qi}/{tag}", res)
                     if tag == "full":
                         for s in plan.stages:
                             sel_counter[s.op_name] += 1
@@ -79,6 +81,7 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
                     "runtime_nocomp_s": rt["nocomp"],
                     "speedup": rt["nocomp"] / max(rt["full"], 1e-9),
                     "selected_ops": dict(sel_counter),
+                    "stage_stats": stats,
                 })
     return rows
 

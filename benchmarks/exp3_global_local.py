@@ -7,9 +7,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import World, execute_gold, generate_queries
-from repro.core import (PlannerConfig, evaluate_vs_gold, execute_plan,
-                        plan_query)
+from benchmarks.common import (World, execute, execute_gold,
+                               generate_queries, stage_stats_rows)
+from repro.core import PlannerConfig, evaluate_vs_gold, plan_query
 from repro.core.baselines import plan_stretto_independent, plan_stretto_local
 
 
@@ -22,19 +22,19 @@ def run(world: World, targets=(0.7, 0.9), n_queries: int = 3,
         for target in targets:
             queries = generate_queries(ds, n_queries, target, seed=29)
             for qi, q in enumerate(queries):
-                gold = execute_gold(q, ds.items, world.registry)
+                gold = execute_gold(q, ds.items, world.reference)
                 for method, planner in (
                         ("global", lambda q: plan_query(
-                            q, ds.items, world.registry, planner_cfg,
+                            q, ds.items, world.backend, planner_cfg,
                             sample_frac=sample_frac)),
                         ("local", lambda q: plan_stretto_local(
-                            q, ds.items, world.registry, planner_cfg,
+                            q, ds.items, world.backend, planner_cfg,
                             sample_frac=sample_frac)),
                         ("independent", lambda q: plan_stretto_independent(
-                            q, ds.items, world.registry, planner_cfg,
+                            q, ds.items, world.backend, planner_cfg,
                             sample_frac=sample_frac))):
                     plan = planner(q)
-                    res = execute_plan(plan, q, ds.items, world.registry)
+                    res = execute(plan, q, ds.items, world.backend)
                     m = evaluate_vs_gold(res, gold, q.semantic_ops)
                     rows.append({
                         "dataset": ds_name, "target": target, "query": qi,
@@ -43,6 +43,8 @@ def run(world: World, targets=(0.7, 0.9), n_queries: int = 3,
                         "met": (m["recall"] >= target
                                 and m["precision"] >= target),
                         "runtime_s": res.runtime_s,
+                        "stage_stats": stage_stats_rows(
+                            f"exp3/{ds_name}/t{target}/q{qi}/{method}", res),
                     })
     return rows
 

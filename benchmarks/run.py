@@ -44,9 +44,13 @@ def main() -> None:
     world = build_world(scale=scale, dataset_names=names)
 
     csv_rows = []
+    stage_stats = []   # per-stage StageStats across all experiments: the
+    #                    perf-trajectory artifact future PRs diff against
 
     print("# exp1 (Fig 5): guarantees + runtime vs baselines", flush=True)
     rows1 = E1.run(world, targets=targets, n_queries=nq, planner_cfg=cfg)
+    for r in rows1:
+        stage_stats += r.pop("stage_stats", [])
     with open(f"{args.out}/exp1.json", "w") as f:
         json.dump(rows1, f, indent=1)
     for line in E1.summarize(rows1):
@@ -67,6 +71,8 @@ def main() -> None:
     spd = E2.speedup_with_compression(world, targets=targets,
                                       n_queries=max(nq - 1, 1),
                                       planner_cfg=cfg)
+    for r in spd:
+        stage_stats += r.pop("stage_stats", [])
     with open(f"{args.out}/exp2.json", "w") as f:
         json.dump({"ladder": lad, "speedup": spd}, f, indent=1)
     for line in E2.summarize(lad, spd):
@@ -80,10 +86,31 @@ def main() -> None:
     print("# exp3 (Fig 8): global vs local vs independent", flush=True)
     rows3 = E3.run(world, targets=targets, n_queries=max(nq - 1, 1),
                    planner_cfg=cfg)
+    for r in rows3:
+        stage_stats += r.pop("stage_stats", [])
     with open(f"{args.out}/exp3.json", "w") as f:
         json.dump(rows3, f, indent=1)
     for line in E3.summarize(rows3):
         print(line)
+
+    with open(f"{args.out}/stage_stats.json", "w") as f:
+        json.dump(stage_stats, f, indent=1)
+    by_op = {}
+    for r in stage_stats:
+        d = by_op.setdefault(r["op_name"], dict(wall_s=0.0, n_tuples=0,
+                                                kv_bytes=0, n_batches=0))
+        d["wall_s"] += r["wall_s"]
+        d["n_tuples"] += r["n_tuples"]
+        d["kv_bytes"] += r["kv_bytes"]
+        d["n_batches"] += r["n_batches"]
+    print(f"# stage stats -> {args.out}/stage_stats.json "
+          f"({len(stage_stats)} stage records)")
+    for op, d in sorted(by_op.items()):
+        us = d["wall_s"] / max(d["n_tuples"], 1) * 1e6
+        csv_rows.append({"name": f"stage_{op}", "us_per_call": us,
+                         "derived": f"tuples={d['n_tuples']} "
+                                    f"kvMB={d['kv_bytes'] / 1e6:.1f} "
+                                    f"batches={d['n_batches']}"})
 
     print("# kernel microbenches", flush=True)
     krows = kernels_bench.run()

@@ -2,8 +2,10 @@
 
 Builds a small planted corpus, precomputes compressed KV-cache profiles
 (the paper's offline phase), plans a 2-operator semantic query under global
-quality targets with the gradient optimizer, executes the cascade plan, and
-compares quality + runtime against the gold plan.
+quality targets with the gradient optimizer, executes the cascade plan
+through the streaming runtime (KV-cache backend, partitioned corpus,
+per-stage telemetry), and compares quality + runtime against the gold
+reference backend.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,16 +15,14 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
 from repro.cache.store import CacheStore
 from repro.core import (PlannerConfig, Query, SemFilter, SemMap,
-                        evaluate_vs_gold, execute_plan, plan_query)
-from repro.core.physical import PhysicalPlan, PhysicalPlanStage
+                        evaluate_vs_gold, plan_query)
 from repro.data.synthetic import (make_dataset, make_planted_params,
                                   planted_config)
+from repro.runtime import (KVCacheBackend, ReferenceBackend, gold_plan_for,
+                           run_plan)
 from repro.serving.engine import ServingEngine
-from repro.serving.operators import make_registry
 
 
 def main():
@@ -33,7 +33,9 @@ def main():
         cfg = planted_config(size)
         engine.register_model(size, cfg, make_planted_params(cfg, seed=1))
         engine.build_profiles(size, ds.items, ratios=[0.0, 0.3, 0.5, 0.8])
-    registry = make_registry(engine)
+    backend = KVCacheBackend(engine, sm_ratios=(0.8, 0.5, 0.0),
+                             lg_ratios=(0.8, 0.5, 0.3))
+    reference = ReferenceBackend(engine)
     print("offline phase done: cache ladder built for 2 models x 4 ratios")
 
     # --- a semantic query with global quality targets ---------------------
@@ -41,27 +43,26 @@ def main():
                SemMap("extract field 2", 2)],
               target_recall=0.75, target_precision=0.75)
 
-    # gold reference (largest model, no compression, on everything)
-    gold_stages = []
-    for li, op in enumerate(q.semantic_ops):
-        ops = registry(op)
-        gold_stages.append(PhysicalPlanStage(
-            li, 0, ops[-1].name, 0.0, 0.0,
-            op.__class__.__name__ == "SemMap", True, 1.0))
-    gold_plan = PhysicalPlan(gold_stages, [], 0.0, 1.0, 1.0, True)
-    gold = execute_plan(gold_plan, q, ds.items, registry)
+    # gold reference: the same plan shape, resolved by the gold-only backend
+    gold = run_plan(gold_plan_for(q, reference), q, ds.items, reference)
 
-    # --- Stretto: plan + execute ------------------------------------------
-    plan = plan_query(q, ds.items, registry,
+    # --- Stretto: plan + execute through the streaming runtime ------------
+    plan = plan_query(q, ds.items, backend,
                       PlannerConfig(steps=200, restarts=3),
                       sample_frac=0.25)
     print(plan.describe())
-    res = execute_plan(plan, q, ds.items, registry)
+    res = run_plan(plan, q, ds.items, backend, partition_size=64)
     m = evaluate_vs_gold(res, gold, q.semantic_ops)
     print(f"quality vs gold: precision={m['precision']:.3f} "
           f"recall={m['recall']:.3f} (targets {q.target_precision})")
     print(f"runtime: {res.runtime_s:.2f}s vs gold {gold.runtime_s:.2f}s "
-          f"-> speedup {gold.runtime_s / max(res.runtime_s, 1e-9):.2f}x")
+          f"-> speedup {gold.runtime_s / max(res.runtime_s, 1e-9):.2f}x "
+          f"({res.n_partitions} partitions)")
+    print("per-stage telemetry:")
+    for st in res.stage_stats:
+        print(f"  {st.op_name:12s} tuples={st.n_tuples:4d} "
+              f"batches={st.n_batches} wall={st.wall_s * 1e3:7.1f}ms "
+              f"kv={st.kv_bytes / 1e6:6.1f}MB llm_calls={st.n_llm_calls}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,9 @@ class CacheStore:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._mem: Dict[Tuple[str, int], Dict[str, np.ndarray]] = {}
+        # monotonic telemetry: bytes of cached KV arrays handed to decode
+        # batches — the runtime's StageStats reads deltas of this counter
+        self.bytes_loaded = 0
 
     def _path(self, profile: Profile, item_id: int) -> str:
         d = os.path.join(self.root, profile.tag)
@@ -78,6 +81,8 @@ class CacheStore:
         slots for the operator query + generated tokens.
         """
         shards = [self.load(profile, i) for i in item_ids]
+        self.bytes_loaded += sum(a.nbytes for s in shards
+                                 for k, a in s.items() if k != "__length__")
         lengths = np.array([int(s["__length__"]) for s in shards], np.int32)
         smax = int(lengths.max()) + headroom
         smax = ((smax + pad_to_multiple - 1) // pad_to_multiple

@@ -27,12 +27,11 @@ from repro.core import bounds as B
 from repro.core import relaxation as R
 from repro.core.logical import Query, SemFilter, SemMap, pull_up_semantic
 from repro.core.optimizer import (OptimizedPlan, PlannerConfig,
-                                  _unflatten_params, init_pipeline_params,
-                                  optimize_query)
+                                  flatten_params, init_pipeline_params,
+                                  optimize_query, unflatten_params)
 from repro.core.physical import PhysicalPlan, PhysicalPlanStage
-from repro.core.planner import (_gold_membership, _pipelines_data,
-                                _selectivities)
 from repro.core.profiling import profile_query
+from repro.runtime.plan_utils import gold_membership, pipelines_data
 
 
 def _normal_lower(p_hat: float, n: int, z: float = 1.645) -> float:
@@ -153,8 +152,8 @@ def plan_pareto_cascades(query: Query, items, registry,
     query = pull_up_semantic(query)
     profiles, sample_idx = profile_query(query, items, registry,
                                          sample_frac, seed)
-    g = jnp.asarray(_gold_membership(profiles))
-    pipelines = _pipelines_data(profiles)
+    g = jnp.asarray(gold_membership(profiles))
+    pipelines = pipelines_data(profiles)
 
     per_op_choices = []
     for p in profiles:
@@ -250,7 +249,7 @@ def plan_stretto_local(query: Query, items, registry,
     tot_cost, rb, pb = 0.0, 1.0, 1.0
     feas = True
     for li, p in enumerate(profiles):
-        data = _pipelines_data([p])[0]
+        data = pipelines_data([p])[0]
         g_local = ((p.scores[-1] > 0).astype(np.float32)
                    if not p.is_map else np.ones(p.scores.shape[1],
                                                 np.float32))
@@ -276,11 +275,10 @@ def plan_stretto_independent(query: Query, items, registry,
                              ) -> PhysicalPlan:
     """Joint gradient optimization, but the global bound is the product of
     per-operator bounds at credibility alpha^(1/m) (independence)."""
-    from repro.core.optimizer import _flatten_params
     t0 = time.perf_counter()
     query = pull_up_semantic(query)
     profiles, _ = profile_query(query, items, registry, sample_frac, seed)
-    pipelines = _pipelines_data(profiles)
+    pipelines = pipelines_data(profiles)
     m = max(len(profiles), 1)
     alpha = cfg.credibility ** (1.0 / m)
     sizes = [p.scores.shape[0] for p in profiles]
@@ -290,7 +288,7 @@ def plan_stretto_independent(query: Query, items, registry,
     max_cost = sum(float(jnp.sum(p.costs)) for p in pipelines) * N
 
     def loss_fn(flat, tau):
-        plist = _unflatten_params(flat, sizes)
+        plist = unflatten_params(flat, sizes)
         rb, pb = 1.0, 1.0
         cost = 0.0
         for data, params, g in zip(pipelines, plist, gs):
@@ -313,7 +311,7 @@ def plan_stretto_independent(query: Query, items, registry,
                + jax.nn.relu(query.target_precision + cfg.margin - pb))
         return cost / max_cost + cfg.beta * pen, (rb, pb, cost)
 
-    flat = _flatten_params([init_pipeline_params(p, 2.0, 0.5)
+    flat = flatten_params([init_pipeline_params(p, 2.0, 0.5)
                             for p in pipelines])
     mm = jnp.zeros_like(flat)
     vv = jnp.zeros_like(flat)
@@ -334,7 +332,7 @@ def plan_stretto_independent(query: Query, items, registry,
     (flat, _, _), _ = jax.lax.scan(step, (flat, mm, vv),
                                    jnp.arange(cfg.steps))
     _, (rb, pb, cost) = loss_fn(flat, 0.0)
-    plist = _unflatten_params(flat, sizes)
+    plist = unflatten_params(flat, sizes)
     selections, thresholds = [], {}
     for li, (p, params) in enumerate(zip(profiles, plist)):
         n_ops = p.scores.shape[0]

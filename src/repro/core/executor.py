@@ -1,23 +1,20 @@
-"""Cascade execution engine (paper Fig. 1 bottom).
+"""Compatibility shim over the streaming runtime (repro.runtime.executor).
 
-Executes a PhysicalPlan over the full dataset: relational operators first,
-then the DP-ordered physical stages. Each stage runs *batched* on exactly
-the tuples that (a) survived every other logical filter so far and (b) are
-still unsure for its own logical operator. accept/reject/unsure use the same
-argmax rule as the planner; gold stages always decide.
-
-Returns the result set, measured per-stage wall time, and tuple counts —
-the runtime metric of Exp 1.
+The cascade execution loop that lived here moved into the runtime
+subsystem, which adds partitioned streaming, cross-stage batch coalescing,
+pluggable backends and uniform StageStats telemetry. `execute_plan` keeps
+the original signature (plan, query, items, registry) and result shape so
+existing callers and tests continue to work; new code should call
+`repro.runtime.run_plan` directly.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.logical import Query, SemFilter, SemMap
+from repro.core.logical import Query, SemMap
 from repro.core.physical import PhysicalPlan
 
 
@@ -31,6 +28,8 @@ class ExecutionResult:
 
 
 def _decide(scores: np.ndarray, thr_hi: float, thr_lo: float, is_map: bool):
+    """Pre-runtime numpy decision rule, kept as the reference the shared
+    jit kernel (repro.runtime.kernel.decide) is unit-tested against."""
     z_acc = scores - thr_hi
     z_rej = thr_lo - scores
     if is_map:
@@ -41,91 +40,28 @@ def _decide(scores: np.ndarray, thr_hi: float, thr_lo: float, is_map: bool):
 
 
 def execute_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
-                 registry: Callable) -> ExecutionResult:
-    sem_ops = query.semantic_ops
-    N = len(items)
-
-    # relational operators first (pull-up already ordered them first)
-    alive = np.ones(N, bool)
-    for rel in plan.relational:
-        alive &= np.array([rel.apply(getattr(it, "row", {}) or {})
-                           for it in items])
-
-    # per-logical-op state
-    n_logical = len(sem_ops)
-    accepted = {li: np.zeros(N, bool) for li in range(n_logical)}
-    rejected = {li: np.zeros(N, bool) for li in range(n_logical)}
-    unsure = {li: alive.copy() for li in range(n_logical)}
-    map_values: Dict[int, np.ndarray] = {}
-    map_done: Dict[int, np.ndarray] = {
-        li: np.zeros(N, bool) for li in range(n_logical)}
-
-    ops_by_name = {}
-    for li, op in enumerate(sem_ops):
-        for phys in registry(op):
-            ops_by_name[(li, phys.name)] = (phys, op)
-
-    stage_times: List[Tuple[str, float, int]] = []
-    total = 0.0
-    n_llm = 0
-    for st in plan.stages:
-        li = st.logical_idx
-        op_obj, sem = ops_by_name[(li, st.op_name)]
-        # survivors of every OTHER logical filter, still unsure here
-        mask = unsure[li].copy()
-        for lj in range(n_logical):
-            if lj != li and not isinstance(sem_ops[lj], SemMap):
-                mask &= ~rejected[lj]
-        idx = np.nonzero(mask)[0]
-        if idx.size == 0:
-            continue
-        batch = [items[i] for i in idx]
-        t0 = time.perf_counter()
-        if isinstance(sem, SemFilter):
-            scores = np.asarray(op_obj.run_filter(batch, sem), np.float32)
-            vals = None
-        else:
-            vals, conf = op_obj.run_map(batch, sem)
-            vals = np.asarray(vals)
-            scores = np.asarray(conf, np.float32)
-        dt = time.perf_counter() - t0
-        total += dt
-        stage_times.append((st.op_name, dt, int(idx.size)))
-        if getattr(op_obj, "uses_llm", True):
-            n_llm += int(idx.size)
-
-        if st.is_gold:
-            acc = (scores > 0) if not st.is_map else np.ones(len(idx), bool)
-            rej = ~acc if not st.is_map else np.zeros(len(idx), bool)
-        else:
-            acc, rej = _decide(scores, st.thr_hi, st.thr_lo, st.is_map)
-        if st.is_map:
-            if li not in map_values:
-                map_values[li] = np.zeros(N, object)
-            commit = acc | (st.is_gold)
-            commit_idx = idx[commit]
-            map_values[li][commit_idx] = vals[commit]
-            map_done[li][commit_idx] = True
-            unsure[li][commit_idx] = False
-        else:
-            accepted[li][idx[acc]] = True
-            rejected[li][idx[rej]] = True
-            unsure[li][idx[acc]] = False
-            unsure[li][idx[rej]] = False
-
-    result = alive.copy()
-    for li, op in enumerate(sem_ops):
-        if isinstance(op, SemFilter):
-            result &= accepted[li]
+                 registry: Callable,
+                 partition_size: Optional[int] = None,
+                 coalesce: Optional[int] = None) -> ExecutionResult:
+    """Execute a plan through the streaming runtime; seed-shaped result."""
+    # deferred import: the runtime depends on core's plan dataclasses, so
+    # importing it at module load would cycle through repro.core.__init__
+    from repro.runtime.backend import as_backend
+    from repro.runtime.executor import run_plan
+    rr = run_plan(plan, query, items, as_backend(registry),
+                  partition_size=partition_size, coalesce=coalesce)
     return ExecutionResult(
-        accepted=result, map_values=map_values, runtime_s=total,
-        stage_times=stage_times, n_llm_tuples=n_llm)
+        accepted=rr.accepted, map_values=rr.map_values,
+        runtime_s=rr.runtime_s, stage_times=rr.stage_times,
+        n_llm_tuples=rr.n_llm_tuples)
 
 
-def evaluate_vs_gold(result: ExecutionResult, gold: ExecutionResult,
-                     sem_ops: Sequence[Any]) -> Dict[str, float]:
+def evaluate_vs_gold(result, gold, sem_ops: Sequence[Any]) -> Dict[str, float]:
     """Global precision/recall of an executed plan vs the gold execution
-    (paper's quality metric — result-set comparison incl. map values)."""
+    (paper's quality metric — result-set comparison incl. map values).
+
+    Accepts any result objects exposing `.accepted` and `.map_values`
+    (ExecutionResult or runtime RuntimeResult)."""
     ours, theirs = result.accepted, gold.accepted
     good = ours & theirs
     # map values must match gold for a tuple to count as a true positive
@@ -140,7 +76,6 @@ def evaluate_vs_gold(result: ExecutionResult, gold: ExecutionResult,
             else:
                 good = good & (ov == gv)
     tp = float(np.sum(good))
-    fp = float(np.sum(ours)) - float(np.sum(good & ours))
     fp = float(np.sum(ours & ~good))
     fn = float(np.sum(theirs & ~good))
     precision = tp / max(tp + fp, 1e-9)

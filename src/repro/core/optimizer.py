@@ -57,13 +57,16 @@ class OptimizedPlan(NamedTuple):
     loss_history: Optional[np.ndarray] = None
 
 
-def _flatten_params(params_list):
+def flatten_params(params_list):
+    """Concatenate per-pipeline (pick, thr_hi, thr_lo) into one flat vector
+    — the optimizer's parameter layout, shared with the Exp 3 ablations."""
     return jnp.concatenate(
         [jnp.concatenate([p.pick_logits, p.thr_hi, p.thr_lo])
          for p in params_list])
 
 
-def _unflatten_params(flat, sizes):
+def unflatten_params(flat, sizes):
+    """Inverse of flatten_params given each pipeline's operator count."""
     out, off = [], 0
     for n in sizes:
         pick = flat[off:off + n]
@@ -99,7 +102,7 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
     max_cost = max(max_cost, 1e-9)
 
     def loss_fn(flat, tau):
-        params_list = _unflatten_params(flat, sizes)
+        params_list = unflatten_params(flat, sizes)
         c = R.query_counts(pipelines, params_list, g, tau,
                            pick_tau=cfg.pick_tau)
         l_rec = B.recall_lower_bound(c.tp, c.fn, cfg.credibility)
@@ -117,7 +120,7 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
     grid = [(2.0, 0.3), (2.0, 1.0), (0.5, 0.5), (3.0, 0.1), (0.5, 1.5),
             (4.0, 0.6)][:max(1, cfg.restarts)]
     for pick0, width in grid:
-        inits.append(_flatten_params(
+        inits.append(flatten_params(
             [init_pipeline_params(p, pick0, width) for p in pipelines]))
     flat0 = jnp.stack(inits)                                   # (K, P)
     decay = (cfg.tau_end / cfg.tau_start) ** (1.0 / max(cfg.steps - 1, 1))
@@ -152,7 +155,7 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
         return c, float(l_rec), float(l_prec)
 
     # --- discrete extraction: cheapest feasible candidate wins ---
-    candidates = [_unflatten_params(flats[k], sizes)
+    candidates = [unflatten_params(flats[k], sizes)
                   for k in range(flats.shape[0])]
     # annealing-path snapshots per restart (conservative -> aggressive)
     for k in range(flats.shape[0]):
@@ -160,7 +163,7 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
             step_i = j * snap_every - 1
             if 0 <= step_i < cfg.steps - 1:
                 candidates.append(
-                    _unflatten_params(trajs[k, step_i], sizes))
+                    unflatten_params(trajs[k, step_i], sizes))
     # fallback: gold-only — identical to the reference by construction
     gold_only = [R.PipelineParams(
         jnp.full_like(p.pick_logits, -10.0).at[-1].set(10.0),

@@ -1,77 +1,21 @@
 """End-to-end planner: pull-up -> profile -> gradient optimize -> reorder.
 
-This is the paper's Figure 2 pipeline, producing a PhysicalPlan the executor
-can run over the full dataset.
+This is the paper's Figure 2 pipeline, producing a PhysicalPlan the
+streaming runtime can execute over the full dataset. Profile/plan helpers
+shared with the baselines live in repro.runtime.plan_utils.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Sequence
-
-import jax.numpy as jnp
-import numpy as np
+from typing import Any, Callable, List, Sequence
 
 from repro.core import ordering as ORD
-from repro.core import relaxation as R
-from repro.core.logical import Query, SemFilter, SemMap, pull_up_semantic
-from repro.core.optimizer import OptimizedPlan, PlannerConfig, optimize_query
-from repro.core.physical import (PhysicalPlan, PhysicalPlanStage,
-                                 ProfiledPipeline)
+from repro.core.logical import Query, pull_up_semantic
+from repro.core.optimizer import PlannerConfig, optimize_query
+from repro.core.physical import PhysicalPlan, PhysicalPlanStage
 from repro.core.profiling import profile_query
-
-
-def _gold_membership(profiles: Sequence[ProfiledPipeline]) -> np.ndarray:
-    g = None
-    for p in profiles:
-        if p.is_map:
-            continue
-        acc = (p.scores[-1] > 0).astype(np.float32)
-        g = acc if g is None else g * acc
-    if g is None:   # map-only query: every tuple is in the gold result
-        g = np.ones(profiles[0].scores.shape[1], np.float32)
-    return g
-
-
-def _pipelines_data(profiles) -> List[R.PipelineData]:
-    out = []
-    for p in profiles:
-        out.append(R.PipelineData(
-            scores=jnp.asarray(p.scores),
-            costs=jnp.asarray(p.costs),
-            is_map=p.is_map,
-            correct=None if p.correct is None else jnp.asarray(p.correct)))
-    return out
-
-
-def _selectivities(profiles, plan: OptimizedPlan):
-    """Hard-simulate the chosen cascades on the sample to estimate each
-    selected op's inter/intra selectivity over the tuples reaching it."""
-    sel = []
-    for p, params, mask in zip(profiles, plan.params, plan.selected):
-        import jax
-        acc_i, rej_i, uns_i = R.hard_decisions(
-            jnp.asarray(p.scores), params.thr_hi, params.thr_lo, p.is_map)
-        acc_i, rej_i = np.asarray(acc_i), np.asarray(rej_i)
-        n_ops, N = p.scores.shape
-        unsure = np.ones(N, bool)
-        per_op = {}
-        for i in range(n_ops):
-            if not mask[i]:
-                continue
-            if i == n_ops - 1:   # gold decides at its natural boundary
-                acc = p.scores[-1] > 0 if not p.is_map else np.ones(N, bool)
-                rej = ~acc
-            else:
-                acc, rej = acc_i[i], rej_i[i]
-            reach = unsure
-            n_reach = max(int(reach.sum()), 1)
-            n_rej = int((reach & rej).sum())
-            n_uns = int((reach & ~acc & ~rej).sum())
-            per_op[i] = (1.0 - n_rej / n_reach,   # inter: not rejected
-                         n_uns / n_reach)         # intra: still unsure
-            unsure = reach & ~acc & ~rej
-        sel.append(per_op)
-    return sel
+from repro.runtime.plan_utils import (estimate_selectivities,
+                                      gold_membership, pipelines_data)
 
 
 def plan_query(query: Query, items: Sequence[Any], registry: Callable,
@@ -82,11 +26,11 @@ def plan_query(query: Query, items: Sequence[Any], registry: Callable,
     query = pull_up_semantic(query)                       # step 1
     profiles, sample_idx = profile_query(                 # step 2
         query, items, registry, sample_frac, seed)
-    g = _gold_membership(profiles)
-    pipelines = _pipelines_data(profiles)
+    g = gold_membership(profiles)
+    pipelines = pipelines_data(profiles)
     plan = optimize_query(pipelines, g,                   # step 3
                           query.target_recall, query.target_precision, cfg)
-    sel = _selectivities(profiles, plan)
+    sel = estimate_selectivities(profiles, plan)
 
     # build stage list (cascades in cost order) for the DP reorderer
     phys_ops: List[ORD.PhysOp] = []

@@ -1,19 +1,24 @@
 """Profiling of semantic operators on a data sample (paper Fig. 2, step 2).
 
-Runs every available physical operator on an i.i.d. sample, records raw
-outputs (log-odds / values) and measured per-tuple cost. Storing outputs
-lets the planner simulate any search-space configuration without further
-LLM calls — exactly the paper's approach.
+Runs every available physical operator on an i.i.d. sample through the
+runtime's single operator-invocation path (`repro.runtime.run_operator`),
+recording raw outputs (log-odds / values) and measured per-tuple cost.
+Storing outputs lets the planner simulate any search-space configuration
+without further LLM calls — exactly the paper's approach — and because
+profiling and execution share one invocation path, profiled costs are
+measured under the same batching/telemetry regime the executor uses.
+
+`registry` may be a legacy `op -> [PhysicalOperator]` callable or any
+runtime Backend.
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Dict, List, Sequence
+from typing import Any, List, Sequence
 
 import numpy as np
 
-from repro.core.logical import Query, SemFilter, SemMap
-from repro.core.physical import PhysicalOperator, ProfiledPipeline
+from repro.core.logical import Query, SemMap
+from repro.core.physical import ProfiledPipeline
 
 
 def profile_query(query: Query, items: Sequence[Any],
@@ -21,9 +26,15 @@ def profile_query(query: Query, items: Sequence[Any],
                   seed: int = 0, min_sample: int = 20):
     """Returns (profiles: list[ProfiledPipeline], sample_idx).
 
-    registry: callable (semantic_op) -> list[PhysicalOperator], sorted by
-    cost_model(), gold LAST.
+    registry: Backend, or callable (semantic_op) -> list[PhysicalOperator]
+    sorted by cost_model(), gold LAST.
     """
+    # deferred import: the runtime depends on core's plan dataclasses, so
+    # importing it at module load would cycle through repro.core.__init__
+    from repro.runtime.backend import as_backend
+    from repro.runtime.executor import run_operator
+
+    backend = as_backend(registry)
     rng = np.random.default_rng(seed)
     n = len(items)
     k = max(min_sample, int(round(sample_frac * n)))
@@ -33,24 +44,15 @@ def profile_query(query: Query, items: Sequence[Any],
 
     profiles: List[ProfiledPipeline] = []
     for li, op in enumerate(query.semantic_ops):
-        ops = registry(op)
+        ops = backend.candidates(op)
         assert ops[-1].is_gold, "gold operator must be last in the registry"
-        scores, costs = [], []
-        values, correct = [], []
+        scores, costs, values = [], [], []
         for phys in ops:
-            t0 = time.perf_counter()
-            if isinstance(op, SemFilter):
-                s = np.asarray(phys.run_filter(sample, op), np.float32)
-                v = None
-            else:
-                v, conf = phys.run_map(sample, op)
-                v = np.asarray(v)
-                s = np.asarray(conf, np.float32)
-            dt = (time.perf_counter() - t0) / max(len(sample), 1)
-            scores.append(s)
-            costs.append(max(dt, 1e-9))
-            if v is not None:
-                values.append(v)
+            out = run_operator(backend, op, phys.name, sample)
+            scores.append(np.asarray(out.scores, np.float32))
+            costs.append(max(out.wall_s / max(len(sample), 1), 1e-9))
+            if out.values is not None:
+                values.append(np.asarray(out.values))
         is_map = isinstance(op, SemMap)
         prof = ProfiledPipeline(
             logical_idx=li, is_map=is_map,

@@ -30,6 +30,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.kernel import decide_traced
+
 
 class PipelineParams(NamedTuple):
     pick_logits: jax.Array   # (n,)
@@ -57,20 +59,10 @@ def soft_decisions(scores, thr_hi, thr_lo, tau, is_map: bool):
 
 
 def hard_decisions(scores, thr_hi, thr_lo, is_map: bool):
-    """tau -> 0 limit of soft_decisions: argmax of the three logits.
-
-    (NOT simply `score > thr_hi`: the learned thresholds may cross, and the
-    softmax limit is the argmax — keeping hard and soft semantics identical
-    removes the extraction gap.)
-    """
-    z_acc = scores - thr_hi[:, None]
-    z_rej = thr_lo[:, None] - scores
-    if is_map:
-        z_rej = jnp.full_like(z_rej, -jnp.inf)
-    acc = (z_acc > 0) & (z_acc >= z_rej)
-    rej = (z_rej > 0) & (z_rej > z_acc)
-    uns = ~(acc | rej)
-    return acc, rej, uns
+    """tau -> 0 limit of soft_decisions: argmax of the three logits, via
+    the shared runtime decision kernel (the executor applies the exact
+    same rule, so extraction and execution cannot drift)."""
+    return decide_traced(scores, thr_hi[:, None], thr_lo[:, None], is_map)
 
 
 def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import init_params, model_template, _is_spec
+from repro.models.transformer import init_params
 
 VOCAB = 256
 TOK_NO, TOK_YES = 1, 2

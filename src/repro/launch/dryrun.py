@@ -154,6 +154,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax < 0.5 returns [dict]
+        ca = ca[0] if ca else {}
     hlo = analyze(compiled.as_text())
 
     # roofline terms (per device; hlo stats are already per-device)

@@ -14,7 +14,7 @@ from jax.sharding import NamedSharding
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed import sharding as sh
 from repro.models import cache_axes, init_cache, param_axes
-from repro.models.transformer import model_template, _is_spec
+from repro.models.transformer import is_spec, model_template
 from repro.training.optimizer import AdamWState
 
 PyTree = Any
@@ -28,7 +28,7 @@ def params_sds(cfg: ModelConfig) -> PyTree:
         dt = jnp.float32 if spec.init == "alog" else dtype
         return jax.ShapeDtypeStruct(spec.shape, dt)
 
-    return jax.tree.map(mk, model_template(cfg), is_leaf=_is_spec)
+    return jax.tree.map(mk, model_template(cfg), is_leaf=is_spec)
 
 
 def opt_state_sds(cfg: ModelConfig) -> AdamWState:

@@ -183,7 +183,9 @@ def model_template(cfg: ModelConfig) -> Dict[str, Any]:
     return t
 
 
-def _is_spec(v):
+def is_spec(v):
+    """True for ParamSpec leaves — the tree-flattening is_leaf predicate
+    shared with launch/specs and the planted-weight constructor."""
     return isinstance(v, ParamSpec)
 
 
@@ -191,7 +193,7 @@ def init_params(cfg: ModelConfig, key: jax.Array,
                 dtype: Optional[jnp.dtype] = None) -> PyTree:
     dtype = dtype or jnp.dtype(cfg.dtype)
     tmpl = model_template(cfg)
-    leaves, treedef = jax.tree.flatten(tmpl, is_leaf=_is_spec)
+    leaves, treedef = jax.tree.flatten(tmpl, is_leaf=is_spec)
     keys = jax.random.split(key, len(leaves))
 
     def make(spec: ParamSpec, k):
@@ -215,7 +217,7 @@ def init_params(cfg: ModelConfig, key: jax.Array,
 def param_axes(cfg: ModelConfig) -> PyTree:
     """Pytree of logical-axes tuples (same structure as params)."""
     return jax.tree.map(lambda s: s.axes, model_template(cfg),
-                        is_leaf=_is_spec)
+                        is_leaf=is_spec)
 
 
 def build_window_array(cfg: ModelConfig) -> np.ndarray:

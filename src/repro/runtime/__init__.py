@@ -1,0 +1,50 @@
+"""Stretto runtime: the single execution path for plans and operators.
+
+Layout
+------
+  kernel.py     — jit-compiled accept/reject/unsure decision kernel
+  backend.py    — Backend protocol + Oracle / KVCache / Reference backends
+  executor.py   — streaming partitioned cascade executor (StageStats)
+  plan_utils.py — public profile/plan helpers (gold membership,
+                  pipeline data, selectivity estimation)
+
+Attribute access is lazy (PEP 562) so leaf modules — notably the
+dependency-free kernel — can be imported from inside repro.core without
+dragging the whole runtime (and its serving imports) into the cycle.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "decide": "repro.runtime.kernel",
+    "gold_decide": "repro.runtime.kernel",
+    "Backend": "repro.runtime.backend",
+    "OracleBackend": "repro.runtime.backend",
+    "KVCacheBackend": "repro.runtime.backend",
+    "ReferenceBackend": "repro.runtime.backend",
+    "RegistryBackend": "repro.runtime.backend",
+    "as_backend": "repro.runtime.backend",
+    "StageStats": "repro.runtime.executor",
+    "RuntimeResult": "repro.runtime.executor",
+    "run_plan": "repro.runtime.executor",
+    "run_operator": "repro.runtime.executor",
+    "gold_membership": "repro.runtime.plan_utils",
+    "gold_plan_for": "repro.runtime.plan_utils",
+    "pipelines_data": "repro.runtime.plan_utils",
+    "estimate_selectivities": "repro.runtime.plan_utils",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(_EXPORTS[name])
+        value = getattr(mod, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,170 @@
+"""Pluggable operator backends for the runtime (paper §5 execution layer).
+
+A Backend answers one question: "score this batch of items under this
+physical implementation of a semantic operator". It owns operator
+resolution (which physical candidates implement a logical op, gold last)
+and batched invocation (`score_filter` / `run_map`), replacing the ad-hoc
+`registry(op) -> [PhysicalOperator]` callables that the planner, profiler,
+executor and baselines each used to thread around and index separately.
+
+Implementations:
+
+  OracleBackend     — wraps any registry callable (in this repo: the
+                      synthetic planted-signal registry from
+                      repro.serving.operators.make_registry).
+  KVCacheBackend    — the paper's contribution, first-class: operators
+                      over precomputed (compressed) KV-cache profiles of a
+                      ServingEngine, with KV-bytes telemetry.
+  ReferenceBackend  — uncompressed gold only (largest model, ratio 0.0):
+                      the quality reference every experiment compares to.
+
+`as_backend` adapts legacy registry callables, so every older entry point
+keeps working while routing through the single runtime execution path.
+"""
+from __future__ import annotations
+
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.core.logical import SemFilter, SemMap
+from repro.core.physical import PhysicalOperator
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Batched execution surface for physical operators."""
+
+    name: str
+
+    def candidates(self, op) -> List[PhysicalOperator]:
+        """Physical implementations of semantic op, cost order, gold LAST."""
+        ...
+
+    def resolve(self, op, op_name: str) -> PhysicalOperator:
+        """The named physical implementation of a semantic operator."""
+        ...
+
+    def score_filter(self, op: SemFilter, op_name: str,
+                     items: Sequence[Any]) -> np.ndarray:
+        """Log-odds scores (len(items),) for a SemFilter batch."""
+        ...
+
+    def run_map(self, op: SemMap, op_name: str, items: Sequence[Any]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """(values, confidences) each (len(items),) for a SemMap batch."""
+        ...
+
+    def kv_bytes_loaded(self) -> int:
+        """Monotonic counter of KV-cache bytes materialized so far (0 for
+        backends that never touch a cache store)."""
+        ...
+
+
+class RegistryBackend:
+    """Shared machinery: a Backend over a `registry(op) -> [PhysicalOperator]`
+    callable. Operator instances are cached per semantic op so repeated
+    stages hit the same jit/profile state."""
+
+    name = "registry"
+
+    def __init__(self, registry: Callable):
+        self._registry = registry
+        self._cache: Dict[Any, List[PhysicalOperator]] = {}
+        self._by_name: Dict[Any, PhysicalOperator] = {}
+
+    def candidates(self, op) -> List[PhysicalOperator]:
+        if op not in self._cache:
+            self._cache[op] = list(self._registry(op))
+        return self._cache[op]
+
+    def resolve(self, op, op_name: str) -> PhysicalOperator:
+        got = self._by_name.get((op, op_name))
+        if got is not None:
+            return got
+        for phys in self.candidates(op):
+            if phys.name == op_name:
+                self._by_name[(op, op_name)] = phys
+                return phys
+        raise KeyError(f"backend {self.name!r} has no operator {op_name!r} "
+                       f"for {op}")
+
+    def score_filter(self, op: SemFilter, op_name: str,
+                     items: Sequence[Any]) -> np.ndarray:
+        phys = self.resolve(op, op_name)
+        return np.asarray(phys.run_filter(items, op), np.float32)
+
+    def run_map(self, op: SemMap, op_name: str, items: Sequence[Any]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        phys = self.resolve(op, op_name)
+        vals, conf = phys.run_map(items, op)
+        return np.asarray(vals), np.asarray(conf, np.float32)
+
+    def kv_bytes_loaded(self) -> int:
+        total, seen = 0, set()
+        for ops in self._cache.values():
+            for phys in ops:
+                store = getattr(getattr(phys, "engine", None), "store", None)
+                if store is not None and id(store) not in seen:
+                    seen.add(id(store))
+                    total += store.bytes_loaded
+        return total
+
+
+class OracleBackend(RegistryBackend):
+    """Backend over the synthetic planted-signal registry (or any other
+    registry callable): scores come from whatever operators the registry
+    hands out."""
+
+    name = "oracle"
+
+
+class KVCacheBackend(RegistryBackend):
+    """Backend over a ServingEngine's precomputed KV-cache profiles — the
+    paper's prefill-skip operators as a first-class runtime backend."""
+
+    name = "kvcache"
+
+    def __init__(self, engine, *, sm: str = "sm", lg: str = "lg",
+                 sm_ratios=(0.8, 0.5, 0.0), lg_ratios=(0.8, 0.5, 0.3),
+                 include_cheap: bool = True):
+        from repro.serving.operators import make_registry
+        self.engine = engine
+        super().__init__(make_registry(
+            engine, sm=sm, lg=lg, sm_ratios=sm_ratios, lg_ratios=lg_ratios,
+            include_cheap=include_cheap))
+
+    def kv_bytes_loaded(self) -> int:
+        return self.engine.store.bytes_loaded
+
+
+class ReferenceBackend(RegistryBackend):
+    """Uncompressed gold only: every semantic operator maps to the single
+    largest-model, ratio-0.0 operator. Executing any plan through this
+    backend reproduces the reference result set."""
+
+    name = "reference"
+
+    def __init__(self, engine, *, lg: str = "lg"):
+        from repro.serving.operators import KVCacheLLMOperator
+        self.engine = engine
+
+        def gold_registry(op):
+            return [KVCacheLLMOperator(engine, lg, 0.0, is_gold=True)]
+
+        super().__init__(gold_registry)
+
+    def kv_bytes_loaded(self) -> int:
+        return self.engine.store.bytes_loaded
+
+
+def as_backend(registry_or_backend) -> Backend:
+    """Adapt a legacy registry callable to the Backend protocol; Backends
+    pass through unchanged."""
+    if isinstance(registry_or_backend, Backend):
+        return registry_or_backend
+    if callable(registry_or_backend):
+        return OracleBackend(registry_or_backend)
+    raise TypeError(f"cannot adapt {type(registry_or_backend)!r} "
+                    "to a runtime Backend")

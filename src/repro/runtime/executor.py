@@ -1,0 +1,265 @@
+"""Streaming cascade executor — the single plan-execution path.
+
+Executes a PhysicalPlan over a corpus in fixed-size partitions: relational
+operators first, then the DP-ordered physical stages. Each stage runs
+batched on exactly the tuples that (a) survived every other logical filter
+so far and (b) are still unsure for its own logical operator; accept /
+reject / unsure is the shared jit kernel (runtime.kernel), gold stages
+always decide.
+
+Why streaming: the seed executor materialized every stage's batch over the
+full dataset at once, so the working set scaled with the corpus. Here the
+corpus flows through the cascade partition by partition — per-tuple
+decisions are independent, so partitioning is result-invariant — and each
+stage keeps a *coalescing buffer*: survivors from several partitions
+accumulate until at least ``coalesce`` tuples are pending (or input is
+exhausted), then flush as one batch. Cross-stage batch coalescing keeps
+late cascade stages (which see few survivors per partition) running at
+engine-friendly batch sizes instead of degenerating to tiny calls.
+
+Every stage flush is timed and counted into per-stage StageStats — wall
+time, tuple counts, LLM calls, KV-cache bytes touched — the uniform
+telemetry the benchmarks record.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.logical import Query, SemFilter, SemMap
+from repro.core.physical import PhysicalPlan, PhysicalPlanStage
+from repro.runtime.backend import Backend, as_backend
+from repro.runtime.kernel import decide, gold_decide
+
+
+@dataclass
+class StageStats:
+    """Per-stage execution telemetry, aggregated over all partition
+    flushes of that stage."""
+    op_name: str
+    logical_idx: int
+    stage: int                 # position within its logical op's cascade
+    wall_s: float = 0.0        # measured operator wall time
+    n_tuples: int = 0          # tuples this stage scored
+    n_llm_calls: int = 0       # tuples scored by LLM-backed operators
+    kv_bytes: int = 0          # KV-cache bytes materialized for this stage
+    n_batches: int = 0         # flushes (coalesced batches) executed
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"op_name": self.op_name, "logical_idx": self.logical_idx,
+                "stage": self.stage, "wall_s": self.wall_s,
+                "n_tuples": self.n_tuples, "n_llm_calls": self.n_llm_calls,
+                "kv_bytes": self.kv_bytes, "n_batches": self.n_batches}
+
+
+@dataclass
+class RuntimeResult:
+    """Result of executing a plan through the streaming runtime."""
+    accepted: np.ndarray                  # (N,) bool — in the result set
+    map_values: Dict[int, np.ndarray]     # logical idx -> values (N,)
+    runtime_s: float                      # sum of measured operator time
+    stage_stats: List[StageStats]         # plan order, executed stages only
+    n_llm_tuples: int                     # tuples processed by LLM ops
+    n_partitions: int = 1
+
+    @property
+    def stage_times(self) -> List[Tuple[str, float, int]]:
+        """Seed-executor-shaped view: (op_name, seconds, n_tuples)."""
+        return [(s.op_name, s.wall_s, s.n_tuples) for s in self.stage_stats]
+
+
+@dataclass
+class _OperatorOutcome:
+    scores: np.ndarray
+    values: Optional[np.ndarray]
+    wall_s: float
+    kv_bytes: int
+    uses_llm: bool
+
+
+def run_operator(backend: Backend, op, op_name: str,
+                 items: Sequence[Any]) -> _OperatorOutcome:
+    """Invoke one physical operator on one batch, with uniform telemetry.
+
+    This is the only place in the tree that calls into a backend's
+    score_filter / run_map — the profiler and the streaming executor both
+    batch through here, so cost and KV-bytes accounting are identical in
+    planning and execution.
+    """
+    phys = backend.resolve(op, op_name)
+    kv0 = backend.kv_bytes_loaded()
+    t0 = time.perf_counter()
+    if isinstance(op, SemFilter):
+        scores = backend.score_filter(op, op_name, items)
+        values = None
+    else:
+        values, scores = backend.run_map(op, op_name, items)
+    wall = time.perf_counter() - t0
+    return _OperatorOutcome(
+        scores=scores, values=values, wall_s=wall,
+        kv_bytes=backend.kv_bytes_loaded() - kv0,
+        uses_llm=bool(getattr(phys, "uses_llm", True)))
+
+
+class _CascadeState:
+    """Per-tuple decision state over the full corpus (bool arrays only —
+    O(N) bits, never item payloads, so it stays tiny even when the items
+    themselves would not fit in memory)."""
+
+    def __init__(self, n_items: int, sem_ops: Sequence[Any]):
+        self.n_logical = len(sem_ops)
+        self.sem_ops = sem_ops
+        self.alive = np.ones(n_items, bool)
+        self.accepted = {li: np.zeros(n_items, bool)
+                         for li in range(self.n_logical)}
+        self.rejected = {li: np.zeros(n_items, bool)
+                         for li in range(self.n_logical)}
+        self.unsure = {li: np.zeros(n_items, bool)
+                       for li in range(self.n_logical)}
+        self.map_values: Dict[int, np.ndarray] = {}
+        self.n_items = n_items
+
+    def admit(self, idx: np.ndarray, alive: np.ndarray):
+        """Register a partition: relational survivors become unsure
+        everywhere (eligible for every cascade)."""
+        self.alive[idx] = alive
+        for li in range(self.n_logical):
+            self.unsure[li][idx[alive]] = True
+
+    def eligible(self, st: PhysicalPlanStage, idx: np.ndarray) -> np.ndarray:
+        """Of tuples `idx`, which must stage `st` score: still unsure for
+        its own logical op and not rejected by any other logical filter."""
+        mask = self.unsure[st.logical_idx][idx]
+        for lj in range(self.n_logical):
+            if lj != st.logical_idx and not isinstance(self.sem_ops[lj],
+                                                       SemMap):
+                mask &= ~self.rejected[lj][idx]
+        return mask
+
+    def apply(self, st: PhysicalPlanStage, idx: np.ndarray,
+              out: _OperatorOutcome):
+        li = st.logical_idx
+        if st.is_gold:
+            acc, rej = gold_decide(out.scores, st.is_map)
+        else:
+            acc, rej, _ = decide(out.scores, st.thr_hi, st.thr_lo, st.is_map)
+        if st.is_map:
+            if li not in self.map_values:
+                self.map_values[li] = np.zeros(self.n_items, object)
+            commit = acc | st.is_gold
+            commit_idx = idx[commit]
+            self.map_values[li][commit_idx] = out.values[commit]
+            self.unsure[li][commit_idx] = False
+        else:
+            self.accepted[li][idx[acc]] = True
+            self.rejected[li][idx[rej]] = True
+            self.unsure[li][idx[acc]] = False
+            self.unsure[li][idx[rej]] = False
+
+    def result_mask(self) -> np.ndarray:
+        result = self.alive.copy()
+        for li, op in enumerate(self.sem_ops):
+            if isinstance(op, SemFilter):
+                result &= self.accepted[li]
+        return result
+
+
+def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
+             backend, *, partition_size: Optional[int] = None,
+             coalesce: Optional[int] = None) -> RuntimeResult:
+    """Execute `plan` over `items` through `backend`.
+
+    partition_size — tuples ingested per streaming step (None: whole
+        corpus at once, the non-streaming special case).
+    coalesce — minimum pending tuples before a stage's buffer flushes
+        mid-stream (default: partition_size). Buffers always flush once
+        ingestion finishes.
+    """
+    backend = as_backend(backend)
+    sem_ops = query.semantic_ops
+    N = len(items)
+    part = max(N, 1) if partition_size is None \
+        else max(int(partition_size), 1)
+    coalesce = part if coalesce is None else max(int(coalesce), 1)
+
+    state = _CascadeState(N, sem_ops)
+    stats = [StageStats(st.op_name, st.logical_idx, st.stage)
+             for st in plan.stages]
+    # pending[s]: global indices that stages < s have fully processed and
+    # stage s has not yet looked at (its coalescing buffer). n_pending
+    # counts the tuples stage s would actually SCORE — a tuple's
+    # eligibility at s is fixed the moment it clears stage s-1 (its own
+    # state can only change when it is processed), so counting at enqueue
+    # time is safe, and low-survivor stages keep accumulating across
+    # partitions instead of flushing tiny batches.
+    pending: List[List[np.ndarray]] = [[] for _ in plan.stages]
+    n_pending = np.zeros(len(plan.stages), np.int64)
+
+    def enqueue(s: int, idx: np.ndarray):
+        # a cohort with nothing for stage s to score passes straight
+        # through — buffering it would stall every downstream stage until
+        # drain without coalescing anything
+        while s < len(plan.stages) and idx.size:
+            n_eligible = int(state.eligible(plan.stages[s], idx).sum())
+            if n_eligible:
+                pending[s].append(idx)
+                n_pending[s] += n_eligible
+                return
+            s += 1
+
+    def flush(s: int):
+        """Run stage s on its buffered tuples, pass them downstream."""
+        if not pending[s]:
+            return
+        idx = np.concatenate(pending[s])
+        pending[s].clear()
+        n_pending[s] = 0
+        st = plan.stages[s]
+        mask = state.eligible(st, idx)
+        run_idx = idx[mask]
+        if run_idx.size:
+            batch = [items[i] for i in run_idx]
+            out = run_operator(backend, sem_ops[st.logical_idx],
+                               st.op_name, batch)
+            state.apply(st, run_idx, out)
+            sg = stats[s]
+            sg.wall_s += out.wall_s
+            sg.n_tuples += int(run_idx.size)
+            sg.n_batches += 1
+            sg.kv_bytes += out.kv_bytes
+            if out.uses_llm:
+                sg.n_llm_calls += int(run_idx.size)
+        enqueue(s + 1, idx)
+
+    n_parts = 0
+    for start in range(0, max(N, 1), part):
+        idx = np.arange(start, min(start + part, N))
+        if idx.size == 0:
+            break
+        n_parts += 1
+        alive = np.ones(idx.size, bool)
+        for rel in plan.relational:
+            alive &= np.array([rel.apply(getattr(items[i], "row", {}) or {})
+                               for i in idx])
+        state.admit(idx, alive)
+        enqueue(0, idx[alive])
+        # let full buffers cascade downstream; a flush of stage s feeds
+        # stage s+1, which may itself have reached the coalesce threshold
+        for s in range(len(plan.stages)):
+            if n_pending[s] >= coalesce:
+                flush(s)
+    # drain: everything still buffered runs now, in stage order
+    for s in range(len(plan.stages)):
+        flush(s)
+
+    executed = [sg for sg in stats if sg.n_batches > 0]
+    return RuntimeResult(
+        accepted=state.result_mask(),
+        map_values=state.map_values,
+        runtime_s=sum(sg.wall_s for sg in executed),
+        stage_stats=executed,
+        n_llm_tuples=sum(sg.n_llm_calls for sg in executed),
+        n_partitions=n_parts)

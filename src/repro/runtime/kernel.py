@@ -1,0 +1,81 @@
+"""Shared accept/reject/unsure decision kernel (paper Eq. 16, tau -> 0).
+
+One jit-compiled, vectorized implementation of the cascade decision rule
+used everywhere a plan's thresholds are applied to raw operator scores:
+the streaming executor, the relaxation's hard-decision extraction, and the
+planner's selectivity simulation. Before this module the rule lived in
+three hand-rolled copies (core/executor.py, core/relaxation.py,
+core/planner._selectivities) that could — and did — drift.
+
+The rule is the argmax of the three logits [s - thr_hi, thr_lo - s, 0]
+(NOT simply `s > thr_hi`: the learned thresholds may cross, and the
+softmax tau->0 limit is the argmax — keeping hard and soft semantics
+identical removes the extraction gap). Maps have no reject branch: a map
+commits (accept) or defers (unsure).
+
+This module is deliberately dependency-free (jax/numpy only) so it can be
+imported from anywhere in the tree without cycles.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decide_traced(scores, thr_hi, thr_lo, is_map: bool):
+    """Traceable argmax rule; broadcasts thresholds against ``scores``.
+
+    Returns boolean arrays (accept, reject, unsure) of ``scores``' shape.
+    Usable inside other jit regions (it inlines).
+    """
+    z_acc = scores - thr_hi
+    z_rej = thr_lo - scores
+    if is_map:
+        z_rej = jnp.full_like(z_rej, -jnp.inf)
+    acc = (z_acc > 0) & (z_acc >= z_rej)
+    rej = (z_rej > 0) & (z_rej > z_acc)
+    uns = ~(acc | rej)
+    return acc, rej, uns
+
+
+_decide_jit = jax.jit(decide_traced, static_argnames="is_map")
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def decide(scores, thr_hi, thr_lo, is_map: bool
+           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy-facing jit entry point: (accept, reject, unsure) bool arrays.
+
+    1-D inputs are padded to the next power of two before dispatch so the
+    streaming executor's ever-varying flush sizes hit O(log N) compiled
+    shapes instead of one compile per batch size; the rule is elementwise,
+    so padding lanes cannot perturb real ones.
+    """
+    scores = np.asarray(scores, np.float32)
+    n = scores.shape[0] if scores.ndim == 1 else None
+    if n is not None and _bucket(n) != n:
+        scores = np.pad(scores, (0, _bucket(n) - n))
+    acc, rej, uns = _decide_jit(jnp.asarray(scores), thr_hi, thr_lo, is_map)
+    acc, rej, uns = np.asarray(acc), np.asarray(rej), np.asarray(uns)
+    if n is not None:
+        acc, rej, uns = acc[:n], rej[:n], uns[:n]
+    return acc, rej, uns
+
+
+def gold_decide(scores, is_map: bool) -> Tuple[np.ndarray, np.ndarray]:
+    """Gold operators decide at their natural boundary (log-odds 0) and
+    are never unsure; gold maps always commit. Returns (accept, reject)."""
+    scores = np.asarray(scores)
+    if is_map:
+        return np.ones(scores.shape, bool), np.zeros(scores.shape, bool)
+    acc = scores > 0
+    return acc, ~acc

@@ -1,0 +1,104 @@
+"""Public plan/profile utilities shared by the planner and every baseline.
+
+These used to live as underscore-private helpers inside core/planner.py;
+the baselines reached in and imported them anyway, which made the planner's
+internals load-bearing API by accident. They are now first-class runtime
+utilities with stable names:
+
+  gold_membership         — (N,) gold-result-set indicator from profiles
+  pipelines_data          — ProfiledPipeline -> relaxation PipelineData
+  estimate_selectivities  — per-selected-op inter/intra selectivities by
+                            hard-simulating the chosen cascades on the
+                            profiled sample (shared decision kernel)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import relaxation as R
+from repro.core.logical import Query, SemMap
+from repro.core.physical import (PhysicalPlan, PhysicalPlanStage,
+                                 ProfiledPipeline)
+from repro.runtime.kernel import decide, gold_decide
+
+
+def gold_plan_for(query: Query, backend) -> PhysicalPlan:
+    """The reference plan: every semantic operator runs its gold physical
+    implementation on every tuple (no thresholds, no cascades)."""
+    from repro.runtime.backend import as_backend
+    backend = as_backend(backend)
+    stages = []
+    for li, op in enumerate(query.semantic_ops):
+        stages.append(PhysicalPlanStage(
+            logical_idx=li, stage=0, op_name=backend.candidates(op)[-1].name,
+            thr_hi=0.0, thr_lo=0.0, is_map=isinstance(op, SemMap),
+            is_gold=True, cost=1.0))
+    return PhysicalPlan(stages=stages,
+                        relational=list(query.relational_ops),
+                        est_cost=0.0, recall_bound=1.0, precision_bound=1.0,
+                        feasible=True)
+
+
+def gold_membership(profiles: Sequence[ProfiledPipeline]) -> np.ndarray:
+    """(N,) {0,1}: tuple is in the gold plan's result set (all gold filters
+    accept; maps are correct vs themselves by construction)."""
+    g = None
+    for p in profiles:
+        if p.is_map:
+            continue
+        acc = (p.scores[-1] > 0).astype(np.float32)
+        g = acc if g is None else g * acc
+    if g is None:   # map-only query: every tuple is in the gold result
+        g = np.ones(profiles[0].scores.shape[1], np.float32)
+    return g
+
+
+def pipelines_data(profiles: Sequence[ProfiledPipeline]
+                   ) -> List[R.PipelineData]:
+    """Lift numpy profiling results into the relaxation's jnp PipelineData."""
+    out = []
+    for p in profiles:
+        out.append(R.PipelineData(
+            scores=jnp.asarray(p.scores),
+            costs=jnp.asarray(p.costs),
+            is_map=p.is_map,
+            correct=None if p.correct is None else jnp.asarray(p.correct)))
+    return out
+
+
+def estimate_selectivities(profiles: Sequence[ProfiledPipeline], plan
+                           ) -> List[Dict[int, Tuple[float, float]]]:
+    """Hard-simulate the chosen cascades on the sample to estimate each
+    selected op's inter/intra selectivity over the tuples reaching it.
+
+    plan: an OptimizedPlan (params + selected masks per pipeline).
+    Returns, per pipeline, {op_index: (sel_inter, sel_intra)} where
+    inter = fraction not rejected, intra = fraction still unsure.
+    """
+    sel = []
+    for p, params, mask in zip(profiles, plan.params, plan.selected):
+        acc_i, rej_i, _ = decide(
+            p.scores, np.asarray(params.thr_hi)[:, None],
+            np.asarray(params.thr_lo)[:, None], p.is_map)
+        n_ops, N = p.scores.shape
+        unsure = np.ones(N, bool)
+        per_op: Dict[int, Tuple[float, float]] = {}
+        for i in range(n_ops):
+            if not mask[i]:
+                continue
+            if i == n_ops - 1:   # gold decides at its natural boundary
+                acc, rej = gold_decide(p.scores[-1], p.is_map)
+            else:
+                acc, rej = acc_i[i], rej_i[i]
+            reach = unsure
+            n_reach = max(int(reach.sum()), 1)
+            n_rej = int((reach & rej).sum())
+            n_uns = int((reach & ~acc & ~rej).sum())
+            per_op[i] = (1.0 - n_rej / n_reach,   # inter: not rejected
+                         n_uns / n_reach)         # intra: still unsure
+            unsure = reach & ~acc & ~rej
+        sel.append(per_op)
+    return sel

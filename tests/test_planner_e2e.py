@@ -53,7 +53,10 @@ def test_plan_and_execute_meets_targets(world):
         # most of the time; being a statistical guarantee, leave headroom
         assert m["recall"] >= 0.55
         assert m["precision"] >= 0.55
-    assert res.runtime_s <= gold.runtime_s * 1.5
+    # cost check on the deterministic LLM-tuple count, not wall clock —
+    # in-process timing is load/order sensitive (jit compiles land in the
+    # first measured batch) and flakes under -x on shared runners
+    assert res.n_llm_tuples <= gold.n_llm_tuples * 1.5
 
 
 def test_relational_pullup(world):

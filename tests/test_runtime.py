@@ -1,0 +1,300 @@
+"""Runtime subsystem tests: shared decision kernel vs the pre-runtime numpy
+rule, and streaming-executor parity against a verbatim copy of the seed
+`execute_plan` (bit-identical accepted masks, map values and tuple counts
+across partition sizes, including partition >= N: the non-streaming case)."""
+import numpy as np
+import pytest
+
+from repro.cache.store import CacheStore
+from repro.core import PlannerConfig, Query, RelFilter, SemFilter, SemMap
+from repro.core.baselines import plan_lotus
+from repro.core.executor import _decide, execute_plan
+from repro.core.physical import PhysicalPlan, PhysicalPlanStage
+from repro.core.planner import plan_query
+from repro.data.synthetic import (make_dataset, make_planted_params,
+                                  planted_config)
+from repro.runtime import (KVCacheBackend, OracleBackend, ReferenceBackend,
+                           as_backend, decide, gold_decide, gold_plan_for,
+                           run_plan)
+from repro.serving.engine import ServingEngine
+from repro.serving.operators import make_registry
+
+FAST = PlannerConfig(steps=120, restarts=2, snapshots=2)
+
+
+# ---------------------------------------------------------------------------
+# decision kernel vs the seed numpy rule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("is_map", [False, True])
+def test_kernel_matches_seed_decide(is_map):
+    rng = np.random.default_rng(7)
+    scores = rng.normal(scale=3.0, size=500).astype(np.float32)
+    cases = [(0.5, -0.5), (-0.2, 0.4),            # normal + crossed
+             (0.0, 0.0),                          # boundary ties
+             (float("inf"), -float("inf")),       # lotus-style sentinels
+             (float("inf"), 0.3), (-1.0, float("-inf"))]
+    cases += [(float(rng.normal()), float(rng.normal())) for _ in range(20)]
+    for hi, lo in cases:
+        acc_np, rej_np = _decide(scores, hi, lo, is_map)
+        acc_k, rej_k, uns_k = decide(scores, hi, lo, is_map)
+        np.testing.assert_array_equal(acc_k, acc_np, err_msg=f"{hi},{lo}")
+        np.testing.assert_array_equal(rej_k, rej_np, err_msg=f"{hi},{lo}")
+        np.testing.assert_array_equal(uns_k, ~(acc_np | rej_np))
+    # exact score==threshold ties follow the argmax rule, not `>`
+    s = np.asarray([1.0, 2.0, 3.0], np.float32)
+    acc, rej, uns = decide(s, 2.0, 2.0, False)
+    acc_np, rej_np = _decide(s, 2.0, 2.0, False)
+    np.testing.assert_array_equal(acc, acc_np)
+    np.testing.assert_array_equal(rej, rej_np)
+
+
+def test_gold_decide():
+    s = np.asarray([-1.0, 0.0, 2.0], np.float32)
+    acc, rej = gold_decide(s, False)
+    np.testing.assert_array_equal(acc, [False, False, True])
+    np.testing.assert_array_equal(rej, ~acc)
+    acc, rej = gold_decide(s, True)
+    assert acc.all() and not rej.any()
+
+
+# ---------------------------------------------------------------------------
+# seed executor, copied verbatim from the pre-runtime core/executor.py —
+# the golden reference the streaming runtime must reproduce bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _seed_execute_plan(plan, query, items, registry):
+    sem_ops = query.semantic_ops
+    N = len(items)
+    alive = np.ones(N, bool)
+    for rel in plan.relational:
+        alive &= np.array([rel.apply(getattr(it, "row", {}) or {})
+                           for it in items])
+    n_logical = len(sem_ops)
+    accepted = {li: np.zeros(N, bool) for li in range(n_logical)}
+    rejected = {li: np.zeros(N, bool) for li in range(n_logical)}
+    unsure = {li: alive.copy() for li in range(n_logical)}
+    map_values = {}
+    ops_by_name = {}
+    for li, op in enumerate(sem_ops):
+        for phys in registry(op):
+            ops_by_name[(li, phys.name)] = (phys, op)
+    stage_counts = []
+    n_llm = 0
+    for st in plan.stages:
+        li = st.logical_idx
+        op_obj, sem = ops_by_name[(li, st.op_name)]
+        mask = unsure[li].copy()
+        for lj in range(n_logical):
+            if lj != li and not isinstance(sem_ops[lj], SemMap):
+                mask &= ~rejected[lj]
+        idx = np.nonzero(mask)[0]
+        if idx.size == 0:
+            continue
+        batch = [items[i] for i in idx]
+        if isinstance(sem, SemFilter):
+            scores = np.asarray(op_obj.run_filter(batch, sem), np.float32)
+            vals = None
+        else:
+            vals, conf = op_obj.run_map(batch, sem)
+            vals = np.asarray(vals)
+            scores = np.asarray(conf, np.float32)
+        stage_counts.append((st.op_name, int(idx.size)))
+        if getattr(op_obj, "uses_llm", True):
+            n_llm += int(idx.size)
+        if st.is_gold:
+            acc = (scores > 0) if not st.is_map else np.ones(len(idx), bool)
+            rej = ~acc if not st.is_map else np.zeros(len(idx), bool)
+        else:
+            acc, rej = _decide(scores, st.thr_hi, st.thr_lo, st.is_map)
+        if st.is_map:
+            if li not in map_values:
+                map_values[li] = np.zeros(N, object)
+            commit = acc | (st.is_gold)
+            commit_idx = idx[commit]
+            map_values[li][commit_idx] = vals[commit]
+            unsure[li][commit_idx] = False
+        else:
+            accepted[li][idx[acc]] = True
+            rejected[li][idx[rej]] = True
+            unsure[li][idx[acc]] = False
+            unsure[li][idx[rej]] = False
+    result = alive.copy()
+    for li, op in enumerate(sem_ops):
+        if isinstance(op, SemFilter):
+            result &= accepted[li]
+    return result, map_values, stage_counts, n_llm
+
+
+# ---------------------------------------------------------------------------
+# streaming parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    ds = make_dataset("rt", 120, seed=11)
+    store = CacheStore(str(tmp_path_factory.mktemp("cache")))
+    eng = ServingEngine(store)
+    for size in ("sm", "lg"):
+        cfg = planted_config(size)
+        eng.register_model(size, cfg, make_planted_params(cfg, seed=1))
+        eng.build_profiles(size, ds.items, ratios=[0.0, 0.5, 0.8],
+                           prefill_batch=48)
+    registry = make_registry(eng, sm_ratios=(0.8, 0.0), lg_ratios=(0.5,))
+    return ds, eng, registry
+
+
+def _assert_parity(plan, q, items, registry, partition_sizes):
+    ref_acc, ref_maps, ref_counts, ref_llm = _seed_execute_plan(
+        plan, q, items, registry)
+    for psize in partition_sizes:
+        rr = run_plan(plan, q, items, as_backend(registry),
+                      partition_size=psize)
+        np.testing.assert_array_equal(rr.accepted, ref_acc,
+                                      err_msg=f"partition={psize}")
+        assert set(rr.map_values) == set(ref_maps)
+        for li in ref_maps:
+            np.testing.assert_array_equal(rr.map_values[li], ref_maps[li],
+                                          err_msg=f"partition={psize}")
+        assert rr.n_llm_tuples == ref_llm
+        # per-stage tuple counts, in plan order, executed stages only
+        got_by_stage = [(s.op_name, s.n_tuples) for s in rr.stage_stats]
+        assert got_by_stage == ref_counts, f"partition={psize}"
+
+
+def test_streaming_parity_planned_query(world):
+    ds, eng, registry = world
+    q = Query([SemFilter("f1", 1), SemMap("extract v3", 3)],
+              target_recall=0.7, target_precision=0.7)
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.35)
+    _assert_parity(plan, q, ds.items, registry,
+                   partition_sizes=[None, len(ds.items) + 40, 32, 11])
+
+
+def test_streaming_parity_lotus_plan_with_relational(world):
+    ds, eng, registry = world
+    q = Query([SemFilter("f2", 2), RelFilter("category", "==", "news"),
+               SemFilter("f4", 4)],
+              target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, registry, sample_frac=0.35)
+    plan = PhysicalPlan(plan.stages, list(q.relational_ops), plan.est_cost,
+                        plan.recall_bound, plan.precision_bound,
+                        plan.feasible)
+    _assert_parity(plan, q, ds.items, registry,
+                   partition_sizes=[None, 17, 64])
+
+
+def test_streaming_parity_gold_plan(world):
+    ds, eng, registry = world
+    q = Query([SemFilter("f1", 1), SemFilter("f5", 5)],
+              target_recall=0.9, target_precision=0.9)
+    plan = gold_plan_for(q, registry)
+    _assert_parity(plan, q, ds.items, registry,
+                   partition_sizes=[None, 30])
+
+
+def test_compat_shim_matches_runtime(world):
+    """core.execute_plan (the shim) must return the seed result shape."""
+    ds, eng, registry = world
+    q = Query([SemFilter("f1", 1)], target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, registry, sample_frac=0.35)
+    res = execute_plan(plan, q, ds.items, registry)
+    ref_acc, _, ref_counts, ref_llm = _seed_execute_plan(
+        plan, q, ds.items, registry)
+    np.testing.assert_array_equal(res.accepted, ref_acc)
+    assert res.n_llm_tuples == ref_llm
+    assert [(name, n) for name, _, n in res.stage_times] == ref_counts
+    assert res.runtime_s > 0
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+def test_reference_backend_is_gold(world):
+    ds, eng, registry = world
+    q = Query([SemFilter("f1", 1)], target_recall=0.9, target_precision=0.9)
+    ref = ReferenceBackend(eng)
+    ops = ref.candidates(q.semantic_ops[0])
+    assert len(ops) == 1 and ops[0].is_gold
+    plan = PhysicalPlan([PhysicalPlanStage(
+        0, 0, ops[0].name, 0.0, 0.0, False, True, 1.0)], [], 0.0, 1.0, 1.0,
+        True)
+    rr = run_plan(plan, q, ds.items, ref)
+    # identical to executing the gold op from the full registry
+    gold_name = registry(q.semantic_ops[0])[-1].name
+    plan2 = PhysicalPlan([PhysicalPlanStage(
+        0, 0, gold_name, 0.0, 0.0, False, True, 1.0)], [], 0.0, 1.0, 1.0,
+        True)
+    rr2 = run_plan(plan2, q, ds.items, as_backend(registry))
+    np.testing.assert_array_equal(rr.accepted, rr2.accepted)
+
+
+def test_kvcache_backend_telemetry(world):
+    ds, eng, registry = world
+    backend = KVCacheBackend(eng, sm_ratios=(0.8, 0.0), lg_ratios=(0.5,))
+    q = Query([SemFilter("f3", 3)], target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, backend, sample_frac=0.35)
+    rr = run_plan(plan, q, ds.items, backend, partition_size=40)
+    llm_stages = [s for s in rr.stage_stats if s.n_llm_calls > 0]
+    assert llm_stages, "lotus plan must run at least one LLM stage"
+    assert all(s.kv_bytes > 0 for s in llm_stages)
+    assert all(s.wall_s > 0 for s in rr.stage_stats)
+    assert rr.n_partitions == 3
+
+
+def test_cross_stage_coalescing_batches_across_partitions(world):
+    """With a coalesce threshold above the partition size, stages must
+    accumulate eligible tuples across partitions into fewer, larger
+    batches — and still produce identical results."""
+    ds, eng, registry = world
+    q = Query([SemFilter("f1", 1), SemFilter("f4", 4)],
+              target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, registry, sample_frac=0.35)
+    ref_acc, _, ref_counts, ref_llm = _seed_execute_plan(
+        plan, q, ds.items, registry)
+    n = len(ds.items)
+    fine = run_plan(plan, q, ds.items, as_backend(registry),
+                    partition_size=10, coalesce=1)
+    coal = run_plan(plan, q, ds.items, as_backend(registry),
+                    partition_size=10, coalesce=60)
+    for rr in (fine, coal):
+        np.testing.assert_array_equal(rr.accepted, ref_acc)
+        assert rr.n_llm_tuples == ref_llm
+        assert [(s.op_name, s.n_tuples) for s in rr.stage_stats] \
+            == ref_counts
+    assert fine.n_partitions == coal.n_partitions == (n + 9) // 10
+    by_op_fine = {(s.op_name, s.logical_idx): s.n_batches
+                  for s in fine.stage_stats}
+    for s in coal.stage_stats:
+        # every stage coalesces to fewer (or equal) flushes, and no stage
+        # flushes once per partition at the 60-tuple threshold
+        assert s.n_batches <= by_op_fine[(s.op_name, s.logical_idx)]
+        assert s.n_batches <= int(np.ceil(s.n_tuples / 60)) + 1
+    assert max(s.n_batches for s in coal.stage_stats) < coal.n_partitions
+
+
+def test_empty_corpus_and_relational_only(world):
+    ds, eng, registry = world
+    q = Query([SemFilter("f1", 1)], target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, registry, sample_frac=0.35)
+    for psize in (None, 5):
+        rr = run_plan(plan, q, [], as_backend(registry),
+                      partition_size=psize)
+        assert rr.accepted.shape == (0,) and rr.n_partitions == 0
+    # a plan with no semantic stages applies just the relational filters
+    rel = RelFilter("category", "==", "news")
+    plan0 = PhysicalPlan([], [rel], 0.0, 1.0, 1.0, True)
+    rr = run_plan(plan0, Query([rel], 0.5, 0.5), ds.items,
+                  as_backend(registry))
+    want = np.array([it.row["category"] == "news" for it in ds.items])
+    np.testing.assert_array_equal(rr.accepted, want)
+
+
+def test_as_backend_passthrough(world):
+    ds, eng, registry = world
+    b = OracleBackend(registry)
+    assert as_backend(b) is b
+    assert as_backend(registry) is not registry  # wrapped
+    with pytest.raises(TypeError):
+        as_backend(42)
