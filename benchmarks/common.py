@@ -15,8 +15,8 @@ from repro.core import Query, SemFilter, SemMap
 from repro.core.physical import PhysicalPlan
 from repro.data.synthetic import (Dataset, make_dataset, make_planted_params,
                                   paper_datasets, planted_config)
-from repro.runtime import (KVCacheBackend, ReferenceBackend, RuntimeResult,
-                           gold_plan_for)
+from repro.runtime import (DEFAULT_COALESCE, KVCacheBackend,
+                           ReferenceBackend, RuntimeResult, gold_plan_for)
 from repro.runtime import run_plan as _run_plan
 from repro.serving.engine import ServingEngine
 
@@ -26,9 +26,11 @@ ALL_RATIOS = sorted({0.0, *SM_RATIOS, *LG_RATIOS})
 
 # streaming defaults for benchmark executions: bounded working set with
 # engine-friendly coalesced batches (late cascade stages accumulate
-# eligible tuples across partitions until COALESCE are pending)
+# eligible tuples across partitions until COALESCE are pending). The
+# coalesce width is the runtime's shared default, which is also what the
+# planner's batch-aware cost model amortizes fixed per-call costs over.
 PARTITION_SIZE = 256
-COALESCE = 64
+COALESCE = DEFAULT_COALESCE
 
 
 @dataclass
@@ -106,5 +108,9 @@ def execute_gold(query: Query, items, backend) -> RuntimeResult:
 
 
 def stage_stats_rows(tag: str, result: RuntimeResult) -> List[Dict]:
-    """Flatten a result's StageStats for the perf-trajectory artifact."""
-    return [{"tag": tag, **s.as_dict()} for s in result.stage_stats]
+    """Flatten a result's StageStats for the perf-trajectory artifact,
+    tagged with the dispatch configuration that executed them (per-stage
+    mean batch size rides along in as_dict)."""
+    return [{"tag": tag, "dispatcher": result.dispatcher,
+             "n_workers": result.n_workers, **s.as_dict()}
+            for s in result.stage_stats]

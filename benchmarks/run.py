@@ -11,11 +11,23 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "nogit"
+    except (OSError, subprocess.SubprocessError):
+        return "nogit"
 
 
 def main() -> None:
@@ -93,8 +105,23 @@ def main() -> None:
     for line in E3.summarize(rows3):
         print(line)
 
+    # perf-trajectory artifact: stage_stats.json is always the latest run
+    # (stable name for tooling), and every run ALSO lands in its own
+    # timestamped snapshot so the trajectory accumulates across commits
+    # instead of being clobbered
+    meta = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "git_sha": _git_sha(),
+        "dispatcher": os.environ.get("STRETTO_DISPATCHER", "") or "inline",
+        "scale": scale,
+        "full": bool(args.full),
+    }
     with open(f"{args.out}/stage_stats.json", "w") as f:
         json.dump(stage_stats, f, indent=1)
+    snap = (f"{args.out}/stage_stats-"
+            f"{time.strftime('%Y%m%dT%H%M%S')}-{meta['git_sha']}.json")
+    with open(snap, "w") as f:
+        json.dump({"meta": meta, "stages": stage_stats}, f, indent=1)
     by_op = {}
     for r in stage_stats:
         d = by_op.setdefault(r["op_name"], dict(wall_s=0.0, n_tuples=0,
@@ -103,14 +130,17 @@ def main() -> None:
         d["n_tuples"] += r["n_tuples"]
         d["kv_bytes"] += r["kv_bytes"]
         d["n_batches"] += r["n_batches"]
-    print(f"# stage stats -> {args.out}/stage_stats.json "
-          f"({len(stage_stats)} stage records)")
+    print(f"# stage stats -> {args.out}/stage_stats.json and {snap} "
+          f"({len(stage_stats)} stage records, "
+          f"dispatcher={meta['dispatcher']})")
     for op, d in sorted(by_op.items()):
         us = d["wall_s"] / max(d["n_tuples"], 1) * 1e6
+        mean_b = d["n_tuples"] / max(d["n_batches"], 1)
         csv_rows.append({"name": f"stage_{op}", "us_per_call": us,
                          "derived": f"tuples={d['n_tuples']} "
                                     f"kvMB={d['kv_bytes'] / 1e6:.1f} "
-                                    f"batches={d['n_batches']}"})
+                                    f"batches={d['n_batches']} "
+                                    f"meanb={mean_b:.1f}"})
 
     print("# kernel microbenches", flush=True)
     krows = kernels_bench.run()

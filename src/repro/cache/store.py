@@ -63,6 +63,19 @@ class CacheStore:
         return ((profile.tag, item_id) in self._mem
                 or os.path.exists(self._path(profile, item_id)))
 
+    def any_item_id(self, profile: Profile) -> Optional[int]:
+        """Any stored item id for this profile (None if nothing stored);
+        used to measure per-item cache bytes for batch sizing."""
+        for tag, item_id in self._mem:
+            if tag == profile.tag:
+                return item_id
+        d = os.path.join(self.root, profile.tag)
+        if os.path.isdir(d):
+            for f in os.listdir(d):
+                if f.endswith(".npz"):
+                    return int(f[:-len(".npz")])
+        return None
+
     def storage_bytes(self, profile: Profile) -> int:
         d = os.path.join(self.root, profile.tag)
         if not os.path.isdir(d):

@@ -6,9 +6,10 @@ from repro.core.executor import (ExecutionResult, evaluate_vs_gold,
 from repro.core.logical import (Query, RelFilter, SemFilter, SemMap,
                                 pull_up_semantic)
 from repro.core.optimizer import OptimizedPlan, PlannerConfig, optimize_query
-from repro.core.physical import (PhysicalOperator, PhysicalPlan,
+from repro.core.physical import (CostCurve, PhysicalOperator, PhysicalPlan,
                                  PhysicalPlanStage, ProfiledPipeline)
 from repro.core.planner import plan_query
-from repro.core.profiling import profile_query
-from repro.core.relaxation import (PipelineData, PipelineParams, QueryCounts,
-                                   query_counts, simulate_pipeline)
+from repro.core.profiling import fit_cost_curve, profile_query
+from repro.core.relaxation import (BatchHint, PipelineData, PipelineParams,
+                                   QueryCounts, query_counts,
+                                   simulate_pipeline)

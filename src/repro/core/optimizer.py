@@ -93,18 +93,26 @@ def init_pipeline_params(data: R.PipelineData, pick0: float = 0.5,
 def optimize_query(pipelines: Sequence[R.PipelineData],
                    gold_membership: np.ndarray,
                    target_recall: float, target_precision: float,
-                   cfg: PlannerConfig = PlannerConfig()) -> OptimizedPlan:
+                   cfg: PlannerConfig = PlannerConfig(),
+                   batch_hint: Optional[R.BatchHint] = None
+                   ) -> OptimizedPlan:
+    """batch_hint activates the batch-size-aware cost model for pipelines
+    carrying fixed per-call costs (see relaxation.BatchHint); pipelines
+    without `fixed` data are costed exactly as before."""
     pipelines = list(pipelines)
     sizes = [p.scores.shape[0] for p in pipelines]
     g = jnp.asarray(gold_membership, jnp.float32)
 
-    max_cost = sum(float(jnp.sum(p.costs)) for p in pipelines) * g.shape[0]
+    max_cost = sum(
+        float(jnp.sum(p.costs))
+        + (float(jnp.sum(p.fixed)) if p.fixed is not None else 0.0)
+        for p in pipelines) * g.shape[0]
     max_cost = max(max_cost, 1e-9)
 
     def loss_fn(flat, tau):
         params_list = unflatten_params(flat, sizes)
         c = R.query_counts(pipelines, params_list, g, tau,
-                           pick_tau=cfg.pick_tau)
+                           pick_tau=cfg.pick_tau, batch_hint=batch_hint)
         l_rec = B.recall_lower_bound(c.tp, c.fn, cfg.credibility)
         l_prec = B.precision_lower_bound(c.tp, c.fp, cfg.credibility)
         l_cost = c.cost / max_cost                                 # Eq. 12
@@ -149,7 +157,8 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
     flats, losses, trajs = jax.jit(jax.vmap(run_one))(flat0)
 
     def hard_eval(plist):
-        c = R.query_counts(pipelines, plist, g, 0.0, hard=True)
+        c = R.query_counts(pipelines, plist, g, 0.0, hard=True,
+                           batch_hint=batch_hint)
         l_rec = B.recall_lower_bound(c.tp, c.fn, cfg.credibility)
         l_prec = B.precision_lower_bound(c.tp, c.fp, cfg.credibility)
         return c, float(l_rec), float(l_prec)

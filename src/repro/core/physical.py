@@ -42,6 +42,34 @@ class PhysicalOperator(abc.ABC):
         """Static per-tuple cost estimate (seconds); refined by profiling."""
         return 1.0
 
+    def max_batch(self) -> Optional[int]:
+        """Largest batch this operator can score per call, or None when
+        unbounded. KV-cache operators derive it from the serving engine's
+        memory budget: higher compression -> smaller caches -> larger
+        batches (the paper's batching speedup, §5), which the batch-aware
+        cost model exploits."""
+        return None
+
+
+@dataclass(frozen=True)
+class CostCurve:
+    """Batch-size-aware operator cost: one call on b tuples costs
+    ``fixed_s + per_tuple_s * b`` seconds. Fitted from profiling the
+    operator at several batch sizes; the planner amortizes ``fixed_s``
+    over the coalesced flush width the executor will actually run
+    (bounded by the operator's memory-budgeted max batch), instead of
+    assuming the scalar per-tuple cost of one full-sample batch."""
+    fixed_s: float          # per-call overhead (dispatch, cache load, jit)
+    per_tuple_s: float      # marginal cost of one more tuple in the batch
+
+    def per_tuple_at(self, batch: float) -> float:
+        """Effective per-tuple seconds when flushed in batches of size b."""
+        return self.per_tuple_s + self.fixed_s / max(float(batch), 1.0)
+
+    def call_cost(self, batch: float) -> float:
+        """Wall seconds for one call on a batch of size b."""
+        return self.fixed_s + self.per_tuple_s * max(float(batch), 0.0)
+
 
 @dataclass
 class ProfiledPipeline:
@@ -53,6 +81,8 @@ class ProfiledPipeline:
     costs: np.ndarray             # (n_ops,) measured per-tuple seconds
     values: Optional[np.ndarray] = None     # (n_ops, N) map outputs
     correct: Optional[np.ndarray] = None    # (n_ops, N) value == gold value
+    cost_curves: Optional[List[CostCurve]] = None   # (n_ops,) batch-aware
+    batch_caps: Optional[np.ndarray] = None  # (n_ops,) max batch (inf: none)
 
 
 @dataclass
@@ -64,9 +94,10 @@ class PhysicalPlanStage:
     thr_lo: float
     is_map: bool
     is_gold: bool
-    cost: float                   # profiled per-tuple cost
+    cost: float                   # effective per-tuple cost at exp_batch
     sel_inter: float = 1.0
     sel_intra: float = 1.0
+    exp_batch: float = 0.0        # expected coalesced flush size (0: n/a)
 
 
 @dataclass
@@ -87,8 +118,9 @@ class PhysicalPlan:
             lines.append(f"  rel: {r}")
         for s in self.stages:
             tag = " [gold]" if s.is_gold else ""
+            batch = f" b~{s.exp_batch:.0f}" if s.exp_batch else ""
             lines.append(
                 f"  L{s.logical_idx}/s{s.stage} {s.op_name}{tag} "
                 f"thr=({s.thr_lo:+.2f},{s.thr_hi:+.2f}) "
-                f"cost={s.cost * 1e3:.2f}ms/t")
+                f"cost={s.cost * 1e3:.2f}ms/t{batch}")
         return "\n".join(lines)

@@ -9,11 +9,15 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, List, Sequence
 
+import numpy as np
+
 from repro.core import ordering as ORD
+from repro.core import relaxation as R
 from repro.core.logical import Query, pull_up_semantic
 from repro.core.optimizer import PlannerConfig, optimize_query
 from repro.core.physical import PhysicalPlan, PhysicalPlanStage
 from repro.core.profiling import profile_query
+from repro.runtime.dispatch import DEFAULT_COALESCE
 from repro.runtime.plan_utils import (estimate_selectivities,
                                       gold_membership, pipelines_data)
 
@@ -21,15 +25,21 @@ from repro.runtime.plan_utils import (estimate_selectivities,
 def plan_query(query: Query, items: Sequence[Any], registry: Callable,
                cfg: PlannerConfig = PlannerConfig(),
                sample_frac: float = 0.15, seed: int = 0,
-               reorder: bool = True) -> PhysicalPlan:
+               reorder: bool = True,
+               coalesce: int = DEFAULT_COALESCE) -> PhysicalPlan:
     t0 = time.perf_counter()
     query = pull_up_semantic(query)                       # step 1
     profiles, sample_idx = profile_query(                 # step 2
         query, items, registry, sample_frac, seed)
     g = gold_membership(profiles)
     pipelines = pipelines_data(profiles)
+    # batch-size-aware costing: amortize fixed per-call cost over the
+    # coalesced flush batches the streaming executor will actually run
+    hint = R.BatchHint(width=float(max(coalesce, 1)),
+                       scale=len(items) / max(len(sample_idx), 1))
     plan = optimize_query(pipelines, g,                   # step 3
-                          query.target_recall, query.target_precision, cfg)
+                          query.target_recall, query.target_precision, cfg,
+                          batch_hint=hint)
     sel = estimate_selectivities(profiles, plan)
 
     # build stage list (cascades in cost order) for the DP reorderer
@@ -41,16 +51,22 @@ def plan_query(query: Query, items: Sequence[Any], registry: Callable,
         for i in range(p.scores.shape[0]):
             if not mask[i]:
                 continue
-            inter, intra = sel[li][i]
+            inter, intra, reach = sel[li][i]
+            cap = float(p.batch_caps[i]) if p.batch_caps is not None \
+                else np.inf
+            exp_batch = max(1.0, min(hint.width, cap, reach * len(items)))
+            curve = p.cost_curves[i] if p.cost_curves is not None else None
+            cost = curve.per_tuple_at(exp_batch) if curve is not None \
+                else float(p.costs[i])
             phys_ops.append(ORD.PhysOp(
                 op_id=len(phys_ops), logical_id=li, stage=stage_no,
-                cost=float(p.costs[i]), sel_inter=inter, sel_intra=intra))
+                cost=cost, sel_inter=inter, sel_intra=intra))
             is_gold = i == p.scores.shape[0] - 1
             stage_meta.append(PhysicalPlanStage(
                 logical_idx=li, stage=stage_no, op_name=p.op_names[i],
                 thr_hi=float(params.thr_hi[i]), thr_lo=float(params.thr_lo[i]),
-                is_map=p.is_map, is_gold=is_gold, cost=float(p.costs[i]),
-                sel_inter=inter, sel_intra=intra))
+                is_map=p.is_map, is_gold=is_gold, cost=cost,
+                sel_inter=inter, sel_intra=intra, exp_batch=exp_batch))
             stage_no += 1
 
     if reorder and len(phys_ops) <= 14:                   # step 4

@@ -8,17 +8,44 @@ without further LLM calls — exactly the paper's approach — and because
 profiling and execution share one invocation path, profiled costs are
 measured under the same batching/telemetry regime the executor uses.
 
+Cost is batch-size-aware: each operator is timed at two warmed sub-sample
+batch sizes (so jit compilation pollutes neither point) and a
+`CostCurve(fixed_s, per_tuple_s)` is fitted through them, so the planner
+can amortize fixed
+per-call overhead over the coalesced flush width the executor will really
+use — a scalar per-tuple cost from one full-sample batch hides exactly
+the batching speedup (paper §5) the KV-compression ladder buys.
+Operators also report their memory-budgeted `max_batch` (higher
+compression -> larger batches), recorded as the pipeline's batch caps.
+
 `registry` may be a legacy `op -> [PhysicalOperator]` callable or any
 runtime Backend.
 """
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+from typing import Any, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.logical import Query, SemMap
-from repro.core.physical import ProfiledPipeline
+from repro.core.physical import CostCurve, ProfiledPipeline
+
+
+def fit_cost_curve(points: Sequence[Tuple[int, float]]) -> CostCurve:
+    """Least-squares fit of wall = fixed + per_tuple * batch through
+    (batch_size, wall_s) points; both coefficients clamped non-negative
+    (timing noise can produce a negative intercept or slope)."""
+    if len(points) < 2:
+        b, w = points[0]
+        return CostCurve(0.0, max(w / max(b, 1), 1e-9))
+    bs = np.asarray([p[0] for p in points], np.float64)
+    ws = np.asarray([p[1] for p in points], np.float64)
+    var = float(np.sum((bs - bs.mean()) ** 2))
+    slope = float(np.sum((bs - bs.mean()) * (ws - ws.mean()))) / max(var,
+                                                                     1e-12)
+    slope = max(slope, 1e-9)
+    fixed = max(float(ws.mean()) - slope * float(bs.mean()), 0.0)
+    return CostCurve(fixed, slope)
 
 
 def profile_query(query: Query, items: Sequence[Any],
@@ -41,24 +68,44 @@ def profile_query(query: Query, items: Sequence[Any],
     k = min(k, n)
     sample_idx = np.sort(rng.choice(n, size=k, replace=False))
     sample = [items[i] for i in sample_idx]
+    # cost-curve points: two sub-sample batch sizes, each timed on a
+    # *second* (warmed) call so jit compilation lands in neither point —
+    # the full-sample scoring run stays cold (its compile would otherwise
+    # masquerade as per-tuple cost in the fit)
+    b_small = max(2, k // 8) if k >= 9 else 0
+    b_mid = max(b_small + 1, k // 3) if b_small else 0
 
     profiles: List[ProfiledPipeline] = []
     for li, op in enumerate(query.semantic_ops):
         ops = backend.candidates(op)
         assert ops[-1].is_gold, "gold operator must be last in the registry"
-        scores, costs, values = [], [], []
+        scores, costs, values, curves, caps = [], [], [], [], []
         for phys in ops:
             out = run_operator(backend, op, phys.name, sample)
             scores.append(np.asarray(out.scores, np.float32))
             costs.append(max(out.wall_s / max(len(sample), 1), 1e-9))
             if out.values is not None:
                 values.append(np.asarray(out.values))
+            points = []
+            if b_small:
+                for b in (b_small, b_mid):
+                    run_operator(backend, op, phys.name, sample[:b])  # warm
+                    timed = run_operator(backend, op, phys.name, sample[:b])
+                    points.append((b, timed.wall_s))
+            else:       # sample too small to fit a line: scalar model
+                points.append((len(sample), out.wall_s))
+            curves.append(fit_cost_curve(points))
+            cap_fn = getattr(phys, "max_batch", None)
+            cap = cap_fn() if callable(cap_fn) else None
+            caps.append(float(cap) if cap else np.inf)
         is_map = isinstance(op, SemMap)
         prof = ProfiledPipeline(
             logical_idx=li, is_map=is_map,
             op_names=[p.name for p in ops],
             scores=np.stack(scores),
             costs=np.asarray(costs, np.float32),
+            cost_curves=curves,
+            batch_caps=np.asarray(caps, np.float64),
         )
         if is_map:
             vals = np.stack(values)

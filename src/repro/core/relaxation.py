@@ -30,6 +30,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.dispatch import DEFAULT_COALESCE
 from repro.runtime.kernel import decide_traced
 
 
@@ -41,9 +42,31 @@ class PipelineParams(NamedTuple):
 
 class PipelineData(NamedTuple):
     scores: jax.Array        # (n, N) raw scores per op per sample tuple
-    costs: jax.Array         # (n,) per-tuple cost (seconds)
+    costs: jax.Array         # (n,) marginal per-tuple cost (seconds)
     is_map: bool             # map pipelines have no reject branch
     correct: Optional[jax.Array] = None   # (n, N) for maps: value == gold
+    fixed: Optional[jax.Array] = None     # (n,) per-call fixed cost (s);
+    #                                       None: scalar cost model
+    batch_cap: Optional[jax.Array] = None  # (n,) memory-budgeted max batch
+    #                                        per op (inf: unbounded)
+
+
+class BatchHint(NamedTuple):
+    """Execution-batching context for the batch-size-aware cost model.
+
+    The streaming executor flushes each stage in coalesced batches of
+    ~`width` tuples (capped by the op's own memory-budgeted max batch and
+    by how many tuples actually reach the op); `scale` converts
+    sample-tuple reach mass into corpus tuples (N_corpus / N_sample).
+    With these, expected cost amortizes each op's fixed per-call cost
+    over the batch size it will really see — the paper's §5 batching
+    speedup (higher KV compression -> larger batches -> fewer calls) made
+    visible to the optimizer."""
+    # executor coalesce width (tuples per flush) — defaults to the
+    # runtime's shared constant so planner and executor price/run the
+    # same flush size out of the box
+    width: float = float(DEFAULT_COALESCE)
+    scale: float = 1.0       # corpus tuples per profiled sample tuple
 
 
 def soft_decisions(scores, thr_hi, thr_lo, tau, is_map: bool):
@@ -66,14 +89,34 @@ def hard_decisions(scores, thr_hi, thr_lo, is_map: bool):
 
 
 def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,
-                      hard: bool = False, pick_tau=None):
+                      hard: bool = False, pick_tau=None,
+                      batch_hint: Optional[BatchHint] = None,
+                      reach_weight=None):
     """Soft cascade (Eq. 1-3) for one logical operator.
 
     Returns (p_accept (N,), expected_cost (N,), p_chosen (n, N)).
     p_chosen[i, t] = probability tuple t is *decided* by op i (its accept or
     reject fires) — used by maps to weight value correctness.
+
+    When `data.fixed` is set, per-op cost is batch-size-aware: the
+    expected flush batch at op i is min(reach_i * scale, width, cap_i)
+    where reach_i is the expected number of sample tuples the op scores,
+    and cost becomes per_tuple + fixed / batch — differentiable, so the
+    optimizer feels that a rarely-reached (or memory-capped) op pays its
+    per-call overhead on tiny batches. `reach_weight` (N,) is each
+    tuple's probability of reaching this pipeline at all (upstream
+    filters' survival, supplied by query_counts); the executor never
+    scores upstream-rejected tuples, so they must not inflate the
+    expected batch.
     """
     n, N = data.scores.shape
+    hint = batch_hint if batch_hint is not None else BatchHint()
+    fixed = data.fixed if data.fixed is not None \
+        else jnp.zeros_like(data.costs)
+    cap = data.batch_cap if data.batch_cap is not None \
+        else jnp.full_like(data.costs, jnp.inf)
+    width = jnp.minimum(cap, hint.width)    # (n,) max feasible flush size
+    weight = jnp.ones(N) if reach_weight is None else reach_weight
     if hard:
         sigma = (jax.nn.sigmoid(params.pick_logits) > 0.5).astype(jnp.float32)
         acc_i, rej_i, uns_i = hard_decisions(
@@ -102,8 +145,15 @@ def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,
 
     def step(carry, xs):
         accept, reject, unsure, cost = carry
-        s, a_i, r_i, c_i = xs
-        cost = cost + unsure * s * c_i                    # Eq. 4 (w/ sigma)
+        s, a_i, r_i, c_i, f_i, w_i = xs
+        reach = unsure * s       # P(op i scores tuple t | reaches pipeline)
+        # expected coalesced flush batch at this op: how many corpus
+        # tuples reach it (upstream survival included), clipped by
+        # coalesce width and its memory cap
+        b_i = jnp.maximum(
+            jnp.minimum(jnp.sum(reach * weight) * hint.scale, w_i), 1.0)
+        cost = cost + reach * (c_i + f_i / b_i)           # Eq. 4 (w/ sigma,
+        #                                                   amortized fixed)
         new_accept = accept + unsure * s * a_i            # Eq. 1
         new_reject = reject + unsure * s * r_i            # Eq. 2
         new_unsure = 1.0 - new_accept - new_reject        # Eq. 3
@@ -112,7 +162,7 @@ def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,
 
     init = (jnp.zeros(N), jnp.zeros(N), jnp.ones(N), jnp.zeros(N))
     (accept, reject, unsure, cost), decided = jax.lax.scan(
-        step, init, (sigma, acc_i, rej_i, data.costs))
+        step, init, (sigma, acc_i, rej_i, data.costs, fixed, width))
     # numerical guard: any residual unsure mass goes to reject
     accept = jnp.clip(accept, 0.0, 1.0)
     return accept, cost, decided
@@ -132,7 +182,8 @@ class QueryCounts(NamedTuple):
 
 
 def query_counts(pipelines, params_list, gold_membership, tau,
-                 hard: bool = False, pick_tau=None) -> QueryCounts:
+                 hard: bool = False, pick_tau=None,
+                 batch_hint: Optional[BatchHint] = None) -> QueryCounts:
     """Global soft TP/FP/FN over a query with several logical operators.
 
     pipelines: list[PipelineData]; params_list: list[PipelineParams]
@@ -151,7 +202,8 @@ def query_counts(pipelines, params_list, gold_membership, tau,
     survive = jnp.ones(N)    # tuples reaching this pipeline (plan order)
     for data, params in zip(pipelines, params_list):
         accept, cost, decided = simulate_pipeline(params, data, tau, hard,
-                                                  pick_tau)
+                                                  pick_tau, batch_hint,
+                                                  reach_weight=survive)
         total_cost = total_cost + survive * cost
         if data.is_map:
             p_corr = pipeline_value_correct(decided, data.correct)

@@ -5,6 +5,8 @@ Layout
   kernel.py     — jit-compiled accept/reject/unsure decision kernel
   backend.py    — Backend protocol + Oracle / KVCache / Reference backends
   executor.py   — streaming partitioned cascade executor (StageStats)
+  dispatch.py   — pluggable flush dispatch: inline / thread pool /
+                  sharded partition scatter (STRETTO_DISPATCHER)
   plan_utils.py — public profile/plan helpers (gold membership,
                   pipeline data, selectivity estimation)
 
@@ -27,6 +29,14 @@ _EXPORTS = {
     "RuntimeResult": "repro.runtime.executor",
     "run_plan": "repro.runtime.executor",
     "run_operator": "repro.runtime.executor",
+    "merge_stage_stats": "repro.runtime.executor",
+    "DEFAULT_COALESCE": "repro.runtime.dispatch",
+    "FlushTask": "repro.runtime.dispatch",
+    "InlineDispatcher": "repro.runtime.dispatch",
+    "ThreadPoolDispatcher": "repro.runtime.dispatch",
+    "ShardedDispatcher": "repro.runtime.dispatch",
+    "resolve_dispatcher": "repro.runtime.dispatch",
+    "DISPATCHER_ENV": "repro.runtime.dispatch",
     "gold_membership": "repro.runtime.plan_utils",
     "gold_plan_for": "repro.runtime.plan_utils",
     "pipelines_data": "repro.runtime.plan_utils",

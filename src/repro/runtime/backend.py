@@ -102,14 +102,12 @@ class RegistryBackend:
         return np.asarray(vals), np.asarray(conf, np.float32)
 
     def kv_bytes_loaded(self) -> int:
-        total, seen = 0, set()
-        for ops in self._cache.values():
-            for phys in ops:
-                store = getattr(getattr(phys, "engine", None), "store", None)
-                if store is not None and id(store) not in seen:
-                    seen.add(id(store))
-                    total += store.bytes_loaded
-        return total
+        # Non-serving backends own no cache store, so they report a flat 0
+        # — the StageStats kv_bytes field must not drift with whatever
+        # engine-backed operators a registry callable happens to hand out.
+        # Serving backends (KVCache / Reference) override this with their
+        # engine's store counter.
+        return 0
 
 
 class OracleBackend(RegistryBackend):

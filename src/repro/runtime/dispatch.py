@@ -1,0 +1,190 @@
+"""Pluggable dispatch layer for the streaming executor's stage flushes.
+
+The streaming executor (runtime/executor.py) turned every stage flush into
+an independent batch call; this module decides *where* those calls run.
+A flush becomes a `FlushTask` submitted to a `Dispatcher`:
+
+  InlineDispatcher     — runs the operator on the calling thread and
+                         completes it immediately: today's behavior, the
+                         parity baseline every other dispatcher must match.
+  ThreadPoolDispatcher — overlaps independent stage flushes on a thread
+                         pool. Cohorts in flight are always disjoint tuple
+                         sets (a tuple lives in exactly one coalescing
+                         buffer or one in-flight flush), so operator calls
+                         are data-independent; the executor applies
+                         completions in strict submission (FIFO) order, so
+                         state evolution is deterministic, and accepted /
+                         map_values match the inline schedule bit-for-bit
+                         as long as per-tuple scores are independent of
+                         batch grouping (see run_plan's docstring for the
+                         exact condition).
+  ShardedDispatcher    — scatters `run_plan`'s partition loop itself:
+                         contiguous corpus shards each run the full
+                         streaming cascade independently (per-tuple
+                         decisions are partition-invariant), and only the
+                         `_CascadeState` bool arrays are merged and the
+                         per-stage StageStats summed. Shards are the unit
+                         that maps onto a jax mesh axis or one process per
+                         host in a multi-process deployment; here they run
+                         on a thread pool sharing one engine.
+
+Selection: pass a Dispatcher (or spec string) to `run_plan(dispatcher=...)`
+or set the ``STRETTO_DISPATCHER`` environment variable
+(``inline`` | ``threads[:N]`` | ``sharded[:N]``).
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+DISPATCHER_ENV = "STRETTO_DISPATCHER"
+
+# default coalesced flush width (tuples per stage batch): the single
+# source of truth shared by the executor's streaming default, the
+# benchmarks' execution config and the planner's batch-size-aware cost
+# amortization (BatchHint.width), so planning prices the flush batches
+# execution will actually run. Lives in this dependency-free leaf module
+# so repro.core (whose planner imports it) and repro.runtime (whose
+# executor imports repro.core dataclasses) can both reach it without an
+# import cycle.
+DEFAULT_COALESCE = 64
+
+_DEFAULT_THREADS = 4
+_DEFAULT_SHARDS = 2
+
+
+@dataclass
+class FlushTask:
+    """One coalesced stage flush: a batch of tuples for one physical
+    operator. `items` holds only the tuples the stage will actually score
+    (the eligible subset of its cohort)."""
+    stage_idx: int           # position in plan.stages
+    sem_op: Any              # the logical (semantic) operator
+    op_name: str             # physical operator name to resolve
+    items: List[Any]         # batch payloads, eligible tuples only
+
+
+class _Immediate:
+    """Resolved handle for synchronously executed tasks."""
+
+    __slots__ = ("_value",)
+
+    def __init__(self, value):
+        self._value = value
+
+    def result(self):
+        return self._value
+
+
+class InlineDispatcher:
+    """Run every flush synchronously on the calling thread — the exact
+    pre-dispatch execution schedule, and the parity baseline."""
+
+    name = "inline"
+    n_workers = 1
+    n_shards = 1
+    max_pending = 0     # executor completes each flush right after submit
+
+    def submit(self, task: FlushTask,
+               runner: Callable[[FlushTask], Any]) -> _Immediate:
+        return _Immediate(runner(task))
+
+    def close(self):
+        pass
+
+
+class ThreadPoolDispatcher:
+    """Overlap independent stage flushes on a thread pool.
+
+    The executor bounds in-flight flushes at `max_pending` and applies
+    completions in FIFO submission order, so scheduling decisions (cohort
+    composition, flush points) depend only on deterministically ordered
+    state — never on thread timing. Operator calls themselves are pure
+    batch -> scores functions; jax releases the GIL during device
+    execution, which is where the overlap comes from.
+    """
+
+    name = "threads"
+    n_shards = 1
+
+    def __init__(self, n_workers: int = _DEFAULT_THREADS):
+        self.n_workers = max(int(n_workers), 1)
+        # in-flight window: enough tasks to keep every worker busy while
+        # the main thread prepares the next cohort
+        self.max_pending = 2 * self.n_workers
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    def submit(self, task: FlushTask,
+               runner: Callable[[FlushTask], Any]) -> Future:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.n_workers,
+                thread_name_prefix="stretto-flush")
+        return self._pool.submit(runner, task)
+
+    def close(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+
+class ShardedDispatcher:
+    """Scatter the partition loop: each contiguous corpus shard streams
+    through the full cascade independently; the executor merges only the
+    per-shard bool decision arrays and sums StageStats."""
+
+    name = "sharded"
+    max_pending = 0
+
+    def __init__(self, n_shards: int = _DEFAULT_SHARDS,
+                 n_workers: Optional[int] = None):
+        self.n_shards = max(int(n_shards), 1)
+        self.n_workers = max(int(n_workers or self.n_shards), 1)
+
+    def shard_bounds(self, n_items: int) -> List[Tuple[int, int]]:
+        """Contiguous [lo, hi) shard ranges covering the corpus."""
+        k = min(self.n_shards, max(n_items, 1))
+        step = (n_items + k - 1) // max(k, 1)
+        return [(lo, min(lo + step, n_items))
+                for lo in range(0, n_items, max(step, 1))]
+
+    def map_shards(self, fn: Callable[[int, int], Any],
+                   bounds: Sequence[Tuple[int, int]]) -> List[Any]:
+        if len(bounds) <= 1 or self.n_workers <= 1:
+            return [fn(lo, hi) for lo, hi in bounds]
+        with ThreadPoolExecutor(max_workers=self.n_workers,
+                                thread_name_prefix="stretto-shard") as pool:
+            futs = [pool.submit(fn, lo, hi) for lo, hi in bounds]
+            return [f.result() for f in futs]
+
+    def close(self):
+        pass
+
+
+def resolve_dispatcher(spec=None) -> Tuple[Any, bool]:
+    """Resolve a dispatcher argument to (dispatcher, owned).
+
+    `spec` may be a Dispatcher instance (passed through, owned=False — the
+    caller manages its lifetime), a spec string (``inline``, ``threads``,
+    ``threads:N``, ``sharded``, ``sharded:N``), or None, which reads the
+    ``STRETTO_DISPATCHER`` environment variable (default ``inline``).
+    Owned dispatchers are closed by run_plan when the plan finishes.
+    """
+    if spec is None:
+        spec = os.environ.get(DISPATCHER_ENV, "") or "inline"
+    if hasattr(spec, "submit") or hasattr(spec, "map_shards"):
+        return spec, False
+    if not isinstance(spec, str):
+        raise TypeError(f"cannot resolve {type(spec)!r} to a Dispatcher")
+    kind, _, arg = spec.partition(":")
+    n = int(arg) if arg else None
+    if kind == "inline":
+        return InlineDispatcher(), True
+    if kind == "threads":
+        return ThreadPoolDispatcher(n or _DEFAULT_THREADS), True
+    if kind == "sharded":
+        return ShardedDispatcher(n or _DEFAULT_SHARDS), True
+    raise ValueError(f"unknown dispatcher spec {spec!r} "
+                     "(expected inline | threads[:N] | sharded[:N])")

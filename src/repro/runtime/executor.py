@@ -17,6 +17,14 @@ exhausted), then flush as one batch. Cross-stage batch coalescing keeps
 late cascade stages (which see few survivors per partition) running at
 engine-friendly batch sizes instead of degenerating to tiny calls.
 
+Stage flushes are independent batch calls, so *where* they run is
+pluggable (runtime/dispatch.py): inline on the calling thread, overlapped
+on a thread pool, or — at the partition-loop level — scattered across
+corpus shards whose bool decision arrays merge at the end. The executor
+owns all scheduling state; dispatchers only run the pure batch -> scores
+operator call, and completions are applied in strict submission order, so
+every dispatcher produces identical per-tuple decisions.
+
 Every stage flush is timed and counted into per-stage StageStats — wall
 time, tuple counts, LLM calls, KV-cache bytes touched — the uniform
 telemetry the benchmarks record.
@@ -24,14 +32,17 @@ telemetry the benchmarks record.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.logical import Query, SemFilter, SemMap
 from repro.core.physical import PhysicalPlan, PhysicalPlanStage
 from repro.runtime.backend import Backend, as_backend
+from repro.runtime.dispatch import (DEFAULT_COALESCE, FlushTask,
+                                    InlineDispatcher, resolve_dispatcher)
 from repro.runtime.kernel import decide, gold_decide
 
 
@@ -46,13 +57,23 @@ class StageStats:
     n_tuples: int = 0          # tuples this stage scored
     n_llm_calls: int = 0       # tuples scored by LLM-backed operators
     kv_bytes: int = 0          # KV-cache bytes materialized for this stage
+    #                            (approximate under concurrent dispatch:
+    #                            overlapping flushes share one monotonic
+    #                            counter, so deltas can double-count)
     n_batches: int = 0         # flushes (coalesced batches) executed
+
+    @property
+    def mean_batch(self) -> float:
+        """Mean coalesced flush size — the batch size the cost model's
+        CostCurve amortizes fixed per-call overhead over."""
+        return self.n_tuples / max(self.n_batches, 1)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"op_name": self.op_name, "logical_idx": self.logical_idx,
                 "stage": self.stage, "wall_s": self.wall_s,
                 "n_tuples": self.n_tuples, "n_llm_calls": self.n_llm_calls,
-                "kv_bytes": self.kv_bytes, "n_batches": self.n_batches}
+                "kv_bytes": self.kv_bytes, "n_batches": self.n_batches,
+                "mean_batch": round(self.mean_batch, 2)}
 
 
 @dataclass
@@ -64,6 +85,8 @@ class RuntimeResult:
     stage_stats: List[StageStats]         # plan order, executed stages only
     n_llm_tuples: int                     # tuples processed by LLM ops
     n_partitions: int = 1
+    dispatcher: str = "inline"            # dispatch layer that executed it
+    n_workers: int = 1                    # its concurrency (1 = serial)
 
     @property
     def stage_times(self) -> List[Tuple[str, float, int]]:
@@ -169,21 +192,55 @@ class _CascadeState:
 
 def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
              backend, *, partition_size: Optional[int] = None,
-             coalesce: Optional[int] = None) -> RuntimeResult:
+             coalesce: Optional[int] = None,
+             dispatcher=None) -> RuntimeResult:
     """Execute `plan` over `items` through `backend`.
 
     partition_size — tuples ingested per streaming step (None: whole
         corpus at once, the non-streaming special case).
     coalesce — minimum pending tuples before a stage's buffer flushes
-        mid-stream (default: partition_size). Buffers always flush once
-        ingestion finishes.
+        mid-stream (default: DEFAULT_COALESCE, the flush width the
+        planner's batch-aware cost model amortizes fixed per-call costs
+        over — keep them in sync when overriding). Buffers always flush
+        once ingestion finishes.
+    dispatcher — where stage flushes run: a runtime.dispatch Dispatcher,
+        a spec string (``inline`` | ``threads[:N]`` | ``sharded[:N]``),
+        or None to read the STRETTO_DISPATCHER environment variable.
+        Scheduling is deterministic under every dispatcher; accepted /
+        map_values are bit-identical whenever per-tuple scores do not
+        depend on batch composition (true for the oracle operators by
+        construction, and for the serving engine on equal-length corpora
+        where batch padding cannot shift reductions — async dispatchers
+        regroup flush batches, so a backend whose scores wobble with
+        padding could flip a tuple sitting within float noise of a
+        threshold).
     """
     backend = as_backend(backend)
+    disp, owned = resolve_dispatcher(dispatcher)
+    try:
+        # sharding dispatchers scatter the partition loop itself (a
+        # 1-shard scatter degenerates to one inline streaming pass);
+        # flush dispatchers plug into the streaming loop directly
+        if hasattr(disp, "map_shards"):
+            return _run_sharded(plan, query, items, backend,
+                                partition_size, coalesce, disp)
+        return _run_streaming(plan, query, items, backend,
+                              partition_size, coalesce, disp)
+    finally:
+        if owned:
+            disp.close()
+
+
+def _run_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
+                   backend: Backend, partition_size: Optional[int],
+                   coalesce: Optional[int], disp) -> RuntimeResult:
     sem_ops = query.semantic_ops
     N = len(items)
+    S = len(plan.stages)
     part = max(N, 1) if partition_size is None \
         else max(int(partition_size), 1)
-    coalesce = part if coalesce is None else max(int(coalesce), 1)
+    coalesce = DEFAULT_COALESCE if coalesce is None \
+        else max(int(coalesce), 1)
 
     state = _CascadeState(N, sem_ops)
     stats = [StageStats(st.op_name, st.logical_idx, st.stage)
@@ -196,13 +253,21 @@ def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     # time is safe, and low-survivor stages keep accumulating across
     # partitions instead of flushing tiny batches.
     pending: List[List[np.ndarray]] = [[] for _ in plan.stages]
-    n_pending = np.zeros(len(plan.stages), np.int64)
+    n_pending = np.zeros(S, np.int64)
+    # in-flight flushes, completed strictly in submission (FIFO) order.
+    # Cohorts in flight are disjoint (a tuple lives in exactly one buffer
+    # or one flush), so operator calls never race on state; all state
+    # mutation happens on this thread at completion.
+    inflight: Deque[Tuple[int, np.ndarray, np.ndarray, Any]] = deque()
+
+    def runner(task: FlushTask) -> _OperatorOutcome:
+        return run_operator(backend, task.sem_op, task.op_name, task.items)
 
     def enqueue(s: int, idx: np.ndarray):
         # a cohort with nothing for stage s to score passes straight
         # through — buffering it would stall every downstream stage until
         # drain without coalescing anything
-        while s < len(plan.stages) and idx.size:
+        while s < S and idx.size:
             n_eligible = int(state.eligible(plan.stages[s], idx).sum())
             if n_eligible:
                 pending[s].append(idx)
@@ -210,29 +275,55 @@ def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
                 return
             s += 1
 
-    def flush(s: int):
-        """Run stage s on its buffered tuples, pass them downstream."""
-        if not pending[s]:
-            return
+    def complete_oldest():
+        """Apply the oldest in-flight flush: decisions, stats, downstream
+        hand-off. The only place operator results touch executor state."""
+        s, idx, run_idx, handle = inflight.popleft()
+        out = handle.result()
+        st = plan.stages[s]
+        state.apply(st, run_idx, out)
+        sg = stats[s]
+        sg.wall_s += out.wall_s
+        sg.n_tuples += int(run_idx.size)
+        sg.n_batches += 1
+        sg.kv_bytes += out.kv_bytes
+        if out.uses_llm:
+            sg.n_llm_calls += int(run_idx.size)
+        enqueue(s + 1, idx)
+
+    def submit_flush(s: int):
+        """Dispatch stage s's buffered cohort; eligibility is settled
+        because every tuple in the buffer arrived via a *completed*
+        upstream flush (or pass-through over settled state)."""
         idx = np.concatenate(pending[s])
         pending[s].clear()
         n_pending[s] = 0
         st = plan.stages[s]
         mask = state.eligible(st, idx)
         run_idx = idx[mask]
-        if run_idx.size:
-            batch = [items[i] for i in run_idx]
-            out = run_operator(backend, sem_ops[st.logical_idx],
-                               st.op_name, batch)
-            state.apply(st, run_idx, out)
-            sg = stats[s]
-            sg.wall_s += out.wall_s
-            sg.n_tuples += int(run_idx.size)
-            sg.n_batches += 1
-            sg.kv_bytes += out.kv_bytes
-            if out.uses_llm:
-                sg.n_llm_calls += int(run_idx.size)
-        enqueue(s + 1, idx)
+        if not run_idx.size:
+            enqueue(s + 1, idx)
+            return
+        op = sem_ops[st.logical_idx]
+        backend.resolve(op, st.op_name)   # warm the op cache on this thread
+        batch = [items[i] for i in run_idx]
+        handle = disp.submit(FlushTask(s, op, st.op_name, batch), runner)
+        inflight.append((s, idx, run_idx, handle))
+        while len(inflight) > disp.max_pending:
+            complete_oldest()
+
+    def pump():
+        """Flush every stage at/above its coalesce threshold; completing a
+        windowed flush may refill an earlier stage, so sweep to fixpoint
+        (with an inline dispatcher one sweep reproduces the pre-dispatch
+        schedule exactly and the second is a no-op)."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for s in range(S):
+                if n_pending[s] >= coalesce:
+                    submit_flush(s)
+                    progressed = True
 
     n_parts = 0
     for start in range(0, max(N, 1), part):
@@ -246,14 +337,16 @@ def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
                                for i in idx])
         state.admit(idx, alive)
         enqueue(0, idx[alive])
-        # let full buffers cascade downstream; a flush of stage s feeds
-        # stage s+1, which may itself have reached the coalesce threshold
-        for s in range(len(plan.stages)):
-            if n_pending[s] >= coalesce:
-                flush(s)
-    # drain: everything still buffered runs now, in stage order
-    for s in range(len(plan.stages)):
-        flush(s)
+        pump()
+    # drain: a stage's final flush runs only once nothing upstream —
+    # buffered or in flight — can still feed it; otherwise settle the
+    # oldest in-flight flush and re-examine
+    while inflight or any(pending):
+        s = next((j for j in range(S) if pending[j]), None)
+        if s is not None and not any(f[0] < s for f in inflight):
+            submit_flush(s)
+        else:
+            complete_oldest()
 
     executed = [sg for sg in stats if sg.n_batches > 0]
     return RuntimeResult(
@@ -262,4 +355,74 @@ def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         runtime_s=sum(sg.wall_s for sg in executed),
         stage_stats=executed,
         n_llm_tuples=sum(sg.n_llm_calls for sg in executed),
-        n_partitions=n_parts)
+        n_partitions=n_parts,
+        dispatcher=disp.name, n_workers=disp.n_workers)
+
+
+def merge_stage_stats(per_shard: Sequence[Sequence[StageStats]],
+                      plan: PhysicalPlan) -> List[StageStats]:
+    """Sum per-shard StageStats keyed by (logical_idx, stage, op_name),
+    returned in plan order (executed stages only)."""
+    merged: Dict[Tuple[int, int, str], StageStats] = {}
+    for shard_stats in per_shard:
+        for sg in shard_stats:
+            key = (sg.logical_idx, sg.stage, sg.op_name)
+            m = merged.get(key)
+            if m is None:
+                merged[key] = StageStats(
+                    sg.op_name, sg.logical_idx, sg.stage, sg.wall_s,
+                    sg.n_tuples, sg.n_llm_calls, sg.kv_bytes, sg.n_batches)
+            else:
+                m.wall_s += sg.wall_s
+                m.n_tuples += sg.n_tuples
+                m.n_llm_calls += sg.n_llm_calls
+                m.kv_bytes += sg.kv_bytes
+                m.n_batches += sg.n_batches
+    out = []
+    for st in plan.stages:
+        key = (st.logical_idx, st.stage, st.op_name)
+        if key in merged:
+            out.append(merged.pop(key))
+    return out
+
+
+def _run_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
+                 backend: Backend, partition_size: Optional[int],
+                 coalesce: Optional[int], disp) -> RuntimeResult:
+    """Scatter the partition loop across contiguous corpus shards.
+
+    Per-tuple decisions are partition-invariant (the existing streaming
+    parity guarantee), so each shard can stream through the full cascade
+    independently; only the per-shard bool decision arrays are merged back
+    into corpus order and the StageStats summed. A shard is the natural
+    unit to place on a jax mesh axis or a separate host process; this
+    implementation fans shards out on a thread pool over one shared
+    engine.
+    """
+    N = len(items)
+    bounds = disp.shard_bounds(N)
+    inline = InlineDispatcher()
+
+    def one_shard(lo: int, hi: int) -> RuntimeResult:
+        return _run_streaming(plan, query, items[lo:hi], backend,
+                              partition_size, coalesce, inline)
+
+    shards = disp.map_shards(one_shard, bounds)
+
+    accepted = np.zeros(N, bool)
+    map_values: Dict[int, np.ndarray] = {}
+    for (lo, hi), rr in zip(bounds, shards):
+        accepted[lo:hi] = rr.accepted
+        for li, vals in rr.map_values.items():
+            if li not in map_values:
+                map_values[li] = np.zeros(N, object)
+            map_values[li][lo:hi] = vals
+    stats = merge_stage_stats([rr.stage_stats for rr in shards], plan)
+    return RuntimeResult(
+        accepted=accepted,
+        map_values=map_values,
+        runtime_s=sum(rr.runtime_s for rr in shards),
+        stage_stats=stats,
+        n_llm_tuples=sum(rr.n_llm_tuples for rr in shards),
+        n_partitions=sum(rr.n_partitions for rr in shards),
+        dispatcher=disp.name, n_workers=disp.n_workers)

@@ -58,25 +58,44 @@ def gold_membership(profiles: Sequence[ProfiledPipeline]) -> np.ndarray:
 
 def pipelines_data(profiles: Sequence[ProfiledPipeline]
                    ) -> List[R.PipelineData]:
-    """Lift numpy profiling results into the relaxation's jnp PipelineData."""
+    """Lift numpy profiling results into the relaxation's jnp PipelineData.
+
+    Profiles carrying fitted CostCurves split cost into marginal per-tuple
+    and fixed per-call components (plus the op's memory-budgeted batch
+    cap), activating the batch-size-aware cost model; profiles without
+    curves keep the scalar measured per-tuple cost."""
     out = []
     for p in profiles:
+        if p.cost_curves is not None:
+            costs = jnp.asarray([c.per_tuple_s for c in p.cost_curves],
+                                jnp.float32)
+            fixed = jnp.asarray([c.fixed_s for c in p.cost_curves],
+                                jnp.float32)
+        else:
+            costs = jnp.asarray(p.costs)
+            fixed = None
         out.append(R.PipelineData(
             scores=jnp.asarray(p.scores),
-            costs=jnp.asarray(p.costs),
+            costs=costs,
             is_map=p.is_map,
-            correct=None if p.correct is None else jnp.asarray(p.correct)))
+            correct=None if p.correct is None else jnp.asarray(p.correct),
+            fixed=fixed,
+            batch_cap=None if p.batch_caps is None
+            else jnp.asarray(p.batch_caps, jnp.float32)))
     return out
 
 
 def estimate_selectivities(profiles: Sequence[ProfiledPipeline], plan
-                           ) -> List[Dict[int, Tuple[float, float]]]:
+                           ) -> List[Dict[int, Tuple[float, float, float]]]:
     """Hard-simulate the chosen cascades on the sample to estimate each
     selected op's inter/intra selectivity over the tuples reaching it.
 
     plan: an OptimizedPlan (params + selected masks per pipeline).
-    Returns, per pipeline, {op_index: (sel_inter, sel_intra)} where
-    inter = fraction not rejected, intra = fraction still unsure.
+    Returns, per pipeline, {op_index: (sel_inter, sel_intra, reach_frac)}
+    where inter = fraction not rejected, intra = fraction still unsure,
+    and reach_frac = fraction of the sample the op scores at all — the
+    quantity the batch-aware cost model turns into an expected flush
+    batch size.
     """
     sel = []
     for p, params, mask in zip(profiles, plan.params, plan.selected):
@@ -85,7 +104,7 @@ def estimate_selectivities(profiles: Sequence[ProfiledPipeline], plan
             np.asarray(params.thr_lo)[:, None], p.is_map)
         n_ops, N = p.scores.shape
         unsure = np.ones(N, bool)
-        per_op: Dict[int, Tuple[float, float]] = {}
+        per_op: Dict[int, Tuple[float, float, float]] = {}
         for i in range(n_ops):
             if not mask[i]:
                 continue
@@ -98,7 +117,8 @@ def estimate_selectivities(profiles: Sequence[ProfiledPipeline], plan
             n_rej = int((reach & rej).sum())
             n_uns = int((reach & ~acc & ~rej).sum())
             per_op[i] = (1.0 - n_rej / n_reach,   # inter: not rejected
-                         n_uns / n_reach)         # intra: still unsure
+                         n_uns / n_reach,         # intra: still unsure
+                         n_reach / max(N, 1))     # reach over the sample
             unsure = reach & ~acc & ~rej
         sel.append(per_op)
     return sel

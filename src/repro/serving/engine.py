@@ -89,12 +89,33 @@ class ServingEngine:
 
     # ---------------- online phase ----------------
 
-    def _batch_size(self, profile: Profile, item_ids) -> int:
-        shard = self.store.load(profile, item_ids[0])
+    def max_batch_for(self, model_name: str, ratio: float,
+                      item_id: Optional[int] = None) -> int:
+        """Memory-bounded max decode batch for a (model, ratio) profile.
+
+        Higher compression -> smaller per-item caches -> larger batches ->
+        fewer calls: the paper's batching speedup mechanism (§5), exposed
+        so the planner's batch-size-aware cost model can exploit the
+        compression -> batch-size link. Measures per-item bytes from a
+        stored shard (any shard if `item_id` is None); never exceeds
+        `max_batch`. Falls back to `max_batch` when the profile has no
+        stored shards yet.
+        """
+        profile = Profile(model_name, ratio)
+        if item_id is None:
+            item_id = self.store.any_item_id(profile)
+            if item_id is None:
+                return self.max_batch
+        shard = self.store.load(profile, item_id)
         per_item = sum(a.nbytes for k, a in shard.items()
                        if k != "__length__")
         b = max(1, int(self.memory_budget / max(per_item, 1)))
-        return min(b, self.max_batch, len(item_ids))
+        return min(b, self.max_batch)
+
+    def _batch_size(self, profile: Profile, item_ids) -> int:
+        b = self.max_batch_for(profile.model_name, profile.ratio,
+                               item_ids[0])
+        return min(b, len(item_ids))
 
     def _decode_fn(self, model_name: str):
         if model_name not in self._decode_jit:

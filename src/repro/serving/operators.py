@@ -54,6 +54,11 @@ class KVCacheLLMOperator(PhysicalOperator):
         d = self.engine.models[self.model_name].cfg.d_model
         return d ** 2 * (1.0 - 0.6 * self.ratio)
 
+    def max_batch(self):
+        """Memory-budgeted batch cap for this profile: the compression ->
+        batch-size link the batch-aware cost model feeds to the planner."""
+        return self.engine.max_batch_for(self.model_name, self.ratio)
+
 
 class EmbeddingFilterOperator(PhysicalOperator):
     """BLIP-style embedding similarity filter: cosine between the item's

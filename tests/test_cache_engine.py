@@ -95,6 +95,58 @@ def test_padded_batching_consistent(engine):
     np.testing.assert_allclose(full, solo, atol=2e-3)
 
 
+def test_max_batch_grows_with_compression(engine):
+    """The memory-budget -> max-batch computation (paper §5): higher
+    compression means smaller per-item caches, hence larger batches —
+    bounded above by the engine's max_batch and below by 1."""
+    eng, ds = engine
+    per_item = {r: sum(a.nbytes for k, a in
+                       eng.store.load(Profile("lg", r), 0).items()
+                       if k != "__length__")
+                for r in (0.0, 0.5, 0.8)}
+    assert per_item[0.8] < per_item[0.5] < per_item[0.0]
+    budget0, cap0 = eng.memory_budget, eng.max_batch
+    try:
+        # budget sized so compression visibly widens the batch
+        eng.memory_budget = 8 * per_item[0.0]
+        bs = {r: eng.max_batch_for("lg", r) for r in (0.0, 0.5, 0.8)}
+        assert bs[0.0] < bs[0.5] < bs[0.8]
+        assert bs[0.0] == 8
+        # never exceeds the configured hard cap ...
+        eng.max_batch = 4
+        assert all(eng.max_batch_for("lg", r) == 4 for r in (0.0, 0.5, 0.8))
+        # ... never collapses below one even under an absurd budget
+        eng.max_batch = cap0
+        eng.memory_budget = 1
+        assert all(eng.max_batch_for("lg", r) == 1 for r in (0.0, 0.5, 0.8))
+        # unbounded budget saturates at the hard cap
+        eng.memory_budget = 1e18
+        assert eng.max_batch_for("lg", 0.8) == cap0
+    finally:
+        eng.memory_budget, eng.max_batch = budget0, cap0
+
+
+def test_batch_size_respects_item_count(engine):
+    """_batch_size (the online chunking) is the profile's max batch
+    clipped to the actual batch of ids."""
+    eng, ds = engine
+    ids = [it.item_id for it in ds.items[:10]]
+    assert eng._batch_size(Profile("lg", 0.0), ids) == 10
+    budget0 = eng.memory_budget
+    try:
+        per_item = sum(a.nbytes for k, a in
+                       eng.store.load(Profile("lg", 0.0), ids[0]).items()
+                       if k != "__length__")
+        eng.memory_budget = 3 * per_item
+        assert eng._batch_size(Profile("lg", 0.0), ids) == 3
+    finally:
+        eng.memory_budget = budget0
+    # operators surface the cap to the profiler/cost model
+    from repro.serving.operators import KVCacheLLMOperator
+    op = KVCacheLLMOperator(eng, "lg", 0.8)
+    assert op.max_batch() == eng.max_batch_for("lg", 0.8)
+
+
 def test_prune_dominated():
     profiles = [
         {"ratio": 0.0, "quality": 0.95, "cost": 10.0},

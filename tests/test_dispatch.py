@@ -1,0 +1,199 @@
+"""Dispatch-layer tests: spec resolution, and hypothesis property tests of
+the coalescing-buffer invariants — every input tuple is flushed (scored)
+exactly once per stage it reaches, for any partition size, coalesce width
+and dispatcher. Uses pure-python recording operators so flush membership
+is observable and scores are bit-exact under any batch grouping."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import Query, RelFilter, SemFilter, SemMap
+from repro.core.physical import (PhysicalOperator, PhysicalPlan,
+                                 PhysicalPlanStage)
+from repro.runtime import (InlineDispatcher, ShardedDispatcher,
+                           ThreadPoolDispatcher, as_backend,
+                           resolve_dispatcher, run_plan)
+
+
+# ---------------------------------------------------------------------------
+# resolve_dispatcher
+# ---------------------------------------------------------------------------
+
+def test_resolve_specs():
+    d, owned = resolve_dispatcher("inline")
+    assert isinstance(d, InlineDispatcher) and owned
+    d, owned = resolve_dispatcher("threads:7")
+    assert isinstance(d, ThreadPoolDispatcher) and owned
+    assert d.n_workers == 7 and d.max_pending == 14
+    d, owned = resolve_dispatcher("sharded:5")
+    assert isinstance(d, ShardedDispatcher) and owned
+    assert d.n_shards == 5
+    inst = ThreadPoolDispatcher(2)
+    d, owned = resolve_dispatcher(inst)
+    assert d is inst and not owned      # caller keeps ownership
+    inst.close()
+    with pytest.raises(ValueError):
+        resolve_dispatcher("gpu-farm")
+    with pytest.raises(TypeError):
+        resolve_dispatcher(42)
+
+
+def test_resolve_env_default(monkeypatch):
+    monkeypatch.delenv("STRETTO_DISPATCHER", raising=False)
+    d, _ = resolve_dispatcher(None)
+    assert isinstance(d, InlineDispatcher)
+    monkeypatch.setenv("STRETTO_DISPATCHER", "threads:3")
+    d, owned = resolve_dispatcher(None)
+    assert isinstance(d, ThreadPoolDispatcher) and d.n_workers == 3
+    d.close()
+
+
+def test_shard_bounds_cover_corpus():
+    d = ShardedDispatcher(3)
+    for n in (0, 1, 2, 3, 7, 99):
+        bounds = d.shard_bounds(n)
+        covered = [i for lo, hi in bounds for i in range(lo, hi)]
+        assert covered == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# pure-python recording world (no engine): observable flush membership
+# ---------------------------------------------------------------------------
+
+class _Item:
+    __slots__ = ("idx", "row")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.row = {"grp": idx % 3}
+
+
+def _score(idx, task_id, scale=3.0):
+    """Deterministic pseudo-random score from the tuple id alone — makes
+    decisions independent of batch grouping by construction."""
+    return np.float32(
+        scale * np.sin(np.asarray(idx, np.float64) * 12.9898
+                       + task_id * 78.233))
+
+
+class _RecordingFilter(PhysicalOperator):
+    uses_llm = False
+
+    def __init__(self, name, task_id, log, lock, is_gold=False):
+        self.name = name
+        self.task_id = task_id
+        self.log = log
+        self.lock = lock
+        self.is_gold = is_gold
+
+    def run_filter(self, items, op):
+        idx = [it.idx for it in items]
+        with self.lock:
+            self.log.setdefault(self.name, []).extend(idx)
+        return _score(idx, self.task_id)
+
+
+class _RecordingMap(PhysicalOperator):
+    uses_llm = False
+
+    def __init__(self, name, task_id, log, lock, is_gold=False):
+        self.name = name
+        self.task_id = task_id
+        self.log = log
+        self.lock = lock
+        self.is_gold = is_gold
+
+    def run_filter(self, items, op):
+        raise NotImplementedError
+
+    def run_map(self, items, op):
+        idx = [it.idx for it in items]
+        with self.lock:
+            self.log.setdefault(self.name, []).extend(idx)
+        return (np.asarray(idx, np.int64) % 5, _score(idx, self.task_id))
+
+
+def _world():
+    """(query, plan, registry, log): a 2-stage filter cascade + a 2-stage
+    map cascade behind a relational filter, with every operator logging
+    the exact tuples it scored."""
+    log = {}
+    lock = threading.Lock()
+    f_cheap = _RecordingFilter("f-cheap", 1, log, lock)
+    f_gold = _RecordingFilter("f-gold", 2, log, lock, is_gold=True)
+    m_cheap = _RecordingMap("m-cheap", 3, log, lock)
+    m_gold = _RecordingMap("m-gold", 4, log, lock, is_gold=True)
+    sf, sm = SemFilter("f", 1), SemMap("m", 3)
+    rel = RelFilter("grp", "!=", 0)
+
+    def registry(op):
+        return [f_cheap, f_gold] if isinstance(op, SemFilter) \
+            else [m_cheap, m_gold]
+
+    q = Query([sf, rel, sm], target_recall=0.8, target_precision=0.8)
+    stages = [
+        PhysicalPlanStage(0, 0, "f-cheap", 1.0, -1.0, False, False, 0.1),
+        PhysicalPlanStage(1, 0, "m-cheap", 1.5, -np.inf, True, False, 0.1),
+        PhysicalPlanStage(0, 1, "f-gold", 0.0, 0.0, False, True, 1.0),
+        PhysicalPlanStage(1, 1, "m-gold", 0.0, 0.0, True, True, 1.0),
+    ]
+    plan = PhysicalPlan(stages, [rel], 0.0, 1.0, 1.0, True)
+    return q, plan, registry, log
+
+
+def _expected_flushes(q, plan, items):
+    """Reference: run inline over the whole corpus at once; the tuples
+    each operator scores are schedule-invariant, so this is the expected
+    flush membership for every (partition, coalesce, dispatcher) config."""
+    q2, plan2, registry2, log2 = _world()
+    rr = run_plan(plan2, q2, items, as_backend(registry2),
+                  dispatcher="inline")
+    return rr, {name: sorted(idx) for name, idx in log2.items()}
+
+
+DISPATCHERS = ["inline", "threads:3", "sharded:3", "sharded:1"]
+
+
+@pytest.mark.parametrize("dispatcher", DISPATCHERS)
+def test_flushed_exactly_once_smoke(dispatcher):
+    """Deterministic spot-check of the property below (runs even without
+    the optional hypothesis dep)."""
+    _check_flush_invariants(n=41, part=7, coalesce=13, dispatcher=dispatcher)
+
+
+@given(n=st.integers(0, 60), part=st.integers(1, 23),
+       coalesce=st.integers(1, 50),
+       dispatcher=st.sampled_from(DISPATCHERS))
+@settings(max_examples=30, deadline=None)
+def test_flushed_exactly_once_property(n, part, coalesce, dispatcher):
+    _check_flush_invariants(n, part, coalesce, dispatcher)
+
+
+def _check_flush_invariants(n, part, coalesce, dispatcher):
+    items = [_Item(i) for i in range(n)]
+    q, plan, registry, log = _world()
+    rr = run_plan(plan, q, items, as_backend(registry),
+                  partition_size=part, coalesce=coalesce,
+                  dispatcher=dispatcher)
+    ref, expected = _expected_flushes(q, plan, items)
+    # 1. every tuple a stage reaches is flushed exactly once there —
+    #    no duplicates, none lost, regardless of buffering/scatter
+    assert set(log.keys()) == set(expected.keys())
+    for name, idx in log.items():
+        assert len(idx) == len(set(idx)), \
+            f"{name} scored a tuple twice ({dispatcher}, part={part}, " \
+            f"coalesce={coalesce})"
+        assert sorted(idx) == expected[name], \
+            f"{name} flush membership drifted ({dispatcher}, part={part}, " \
+            f"coalesce={coalesce})"
+    # 2. and the results are bit-identical to the inline reference
+    np.testing.assert_array_equal(rr.accepted, ref.accepted)
+    assert set(rr.map_values) == set(ref.map_values)
+    for li in ref.map_values:
+        np.testing.assert_array_equal(rr.map_values[li], ref.map_values[li])
+    # 3. relational-rejected tuples never reach any stage
+    dead = {it.idx for it in items if it.row["grp"] == 0}
+    for name, idx in log.items():
+        assert not dead & set(idx)

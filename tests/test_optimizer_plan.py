@@ -55,6 +55,83 @@ def test_cascade_beats_gold_only_cost():
     assert plan.est_cost < 0.5 * gold_cost
 
 
+def test_batch_aware_cost_shifts_plan():
+    """Fixed-cost-dominated pipeline: a proxy op with near-gold scores
+    and a negligible *marginal* cost, but a large per-call fixed cost and
+    a memory cap of one tuple per batch (so the fixed cost cannot be
+    amortized). The scalar cost model sees only the marginal cost and
+    loves the op; the batch-size-aware model prices it above gold and
+    must drop it — same scores, same targets, provably different plan."""
+    rng = np.random.default_rng(3)
+    N = 400
+    true = rng.random(N) < 0.4
+    gold = np.where(true, 3.0, -3.0) + rng.normal(0, 0.3, N)
+    trap = np.where(true, 2.5, -2.5) + rng.normal(0, 0.3, N)
+    g = (gold > 0).astype(np.float32)
+    scores = jnp.asarray(np.stack([trap, gold]), jnp.float32)
+    marginal = jnp.asarray([0.001, 1.0])
+
+    scalar = R.PipelineData(scores=scores, costs=marginal, is_map=False)
+    plan_scalar = optimize_query([scalar], g, 0.8, 0.8, CFG)
+    assert plan_scalar.feasible
+    assert plan_scalar.selected[0][0], \
+        "scalar cost model should exploit the cheap-looking proxy"
+
+    aware = R.PipelineData(
+        scores=scores, costs=marginal, is_map=False,
+        fixed=jnp.asarray([2.0, 0.0]),
+        batch_cap=jnp.asarray([1.0, jnp.inf]))
+    hint = R.BatchHint(width=64.0, scale=1.0)
+    plan_aware = optimize_query([aware], g, 0.8, 0.8, CFG, batch_hint=hint)
+    assert plan_aware.feasible
+    assert not plan_aware.selected[0][0], \
+        "batch-aware cost model must price the unamortizable fixed cost"
+    # the batch-aware estimate reflects the true (fixed-inclusive) cost:
+    # gold-only on every tuple, not the fantasy 0.001s/t cascade
+    assert plan_aware.est_cost > plan_scalar.est_cost
+
+
+def test_upstream_survival_shrinks_expected_batches():
+    """A pipeline sitting behind a selective upstream filter sees fewer
+    tuples, so its fixed per-call cost amortizes over smaller flushes:
+    the survival-weighted cost must exceed the unweighted one."""
+    rng = np.random.default_rng(5)
+    N = 200
+    true = rng.random(N) < 0.5
+    gold = np.where(true, 3.0, -3.0) + rng.normal(0, 0.3, N)
+    data = R.PipelineData(
+        scores=jnp.asarray(np.stack([gold * 0.8, gold]), jnp.float32),
+        costs=jnp.asarray([0.01, 1.0]), is_map=False,
+        fixed=jnp.asarray([0.5, 0.5]),
+        batch_cap=jnp.asarray([jnp.inf, jnp.inf]))
+    params = R.PipelineParams(jnp.asarray([10.0, 10.0]),
+                              jnp.asarray([1.0, 0.0]),
+                              jnp.asarray([-1.0, 0.0]))
+    hint = R.BatchHint(width=256.0, scale=1.0)
+    _, cost_full, _ = R.simulate_pipeline(params, data, 0.0, hard=True,
+                                          batch_hint=hint)
+    survive = jnp.full(N, 0.05)    # upstream filter kills 95%
+    _, cost_starved, _ = R.simulate_pipeline(params, data, 0.0, hard=True,
+                                             batch_hint=hint,
+                                             reach_weight=survive)
+    assert float(cost_starved.sum()) > float(cost_full.sum())
+
+
+def test_batch_hint_defaults_keep_scalar_model_exact():
+    """Pipelines without fixed-cost data must be costed identically with
+    and without a batch hint (the scalar model is the fixed=None special
+    case, bit-for-bit)."""
+    data, g = _world()
+    params = [R.PipelineParams(jnp.asarray([2.0, 0.0, 10.0]),
+                               jnp.asarray([1.0, 0.5, 0.0]),
+                               jnp.asarray([-1.0, -0.5, 0.0]))]
+    c0 = R.query_counts([data], params, jnp.asarray(g), 0.5)
+    c1 = R.query_counts([data], params, jnp.asarray(g), 0.5,
+                        batch_hint=R.BatchHint(width=7.0, scale=31.0))
+    assert float(c0.cost) == float(c1.cost)
+    assert float(c0.tp) == float(c1.tp)
+
+
 def test_multi_filter_budget_reallocation():
     """One easy + one hard logical filter: the optimizer should spend the
     error budget on the hard one (paper's central motivation)."""

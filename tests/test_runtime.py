@@ -14,6 +14,7 @@ from repro.core.planner import plan_query
 from repro.data.synthetic import (make_dataset, make_planted_params,
                                   planted_config)
 from repro.runtime import (KVCacheBackend, OracleBackend, ReferenceBackend,
+                           ShardedDispatcher, ThreadPoolDispatcher,
                            as_backend, decide, gold_decide, gold_plan_for,
                            run_plan)
 from repro.serving.engine import ServingEngine
@@ -246,7 +247,10 @@ def test_kvcache_backend_telemetry(world):
 def test_cross_stage_coalescing_batches_across_partitions(world):
     """With a coalesce threshold above the partition size, stages must
     accumulate eligible tuples across partitions into fewer, larger
-    batches — and still produce identical results."""
+    batches — and still produce identical results. Pinned to the inline
+    dispatcher: the per-stage batch-count expectations below encode the
+    inline flush schedule (async dispatchers keep results identical but
+    regroup cohorts)."""
     ds, eng, registry = world
     q = Query([SemFilter("f1", 1), SemFilter("f4", 4)],
               target_recall=0.6, target_precision=0.6)
@@ -255,9 +259,9 @@ def test_cross_stage_coalescing_batches_across_partitions(world):
         plan, q, ds.items, registry)
     n = len(ds.items)
     fine = run_plan(plan, q, ds.items, as_backend(registry),
-                    partition_size=10, coalesce=1)
+                    partition_size=10, coalesce=1, dispatcher="inline")
     coal = run_plan(plan, q, ds.items, as_backend(registry),
-                    partition_size=10, coalesce=60)
+                    partition_size=10, coalesce=60, dispatcher="inline")
     for rr in (fine, coal):
         np.testing.assert_array_equal(rr.accepted, ref_acc)
         assert rr.n_llm_tuples == ref_llm
@@ -289,6 +293,84 @@ def test_empty_corpus_and_relational_only(world):
                   as_backend(registry))
     want = np.array([it.row["category"] == "news" for it in ds.items])
     np.testing.assert_array_equal(rr.accepted, want)
+
+
+def test_oracle_backend_reports_zero_kv_bytes(world):
+    """Non-serving backends must report kv_bytes=0 uniformly — the field
+    must not drift with whatever engine-backed operators a generic
+    registry callable happens to hand out."""
+    ds, eng, registry = world
+    b = OracleBackend(registry)
+    assert b.kv_bytes_loaded() == 0
+    q = Query([SemFilter("f3", 3)], target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, b, sample_frac=0.35)
+    rr = run_plan(plan, q, ds.items, b, partition_size=40)
+    assert all(s.kv_bytes == 0 for s in rr.stage_stats)
+    assert b.kv_bytes_loaded() == 0   # even after executing LLM operators
+    # the serving backend over the same engine does meter its cache store
+    assert KVCacheBackend(eng).kv_bytes_loaded() > 0
+
+
+# ---------------------------------------------------------------------------
+# dispatchers: async / sharded execution must be bit-identical to inline
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_parity_threads_and_sharded(world):
+    """ThreadPoolDispatcher and ShardedDispatcher must produce
+    bit-identical accepted masks and map values to InlineDispatcher
+    across partition sizes and worker/shard counts; per-stage scored
+    tuple totals are schedule-invariant too."""
+    ds, eng, registry = world
+    q = Query([SemFilter("f2", 2), SemMap("extract v3", 3),
+               SemFilter("f4", 4)],
+              target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, registry, sample_frac=0.35)
+    backend = as_backend(registry)
+    ref = run_plan(plan, q, ds.items, backend, partition_size=32,
+                   dispatcher="inline")
+    ref_totals = {(s.op_name, s.logical_idx, s.stage): s.n_tuples
+                  for s in ref.stage_stats}
+    for disp in (ThreadPoolDispatcher(1), ThreadPoolDispatcher(3),
+                 ShardedDispatcher(2), ShardedDispatcher(4, n_workers=2)):
+        for psize in (None, 17, 32):
+            rr = run_plan(plan, q, ds.items, backend,
+                          partition_size=psize, dispatcher=disp)
+            tag = f"{disp.name} psize={psize}"
+            np.testing.assert_array_equal(rr.accepted, ref.accepted,
+                                          err_msg=tag)
+            assert set(rr.map_values) == set(ref.map_values), tag
+            for li in ref.map_values:
+                np.testing.assert_array_equal(
+                    rr.map_values[li], ref.map_values[li], err_msg=tag)
+            assert rr.n_llm_tuples == ref.n_llm_tuples, tag
+            got = {(s.op_name, s.logical_idx, s.stage): s.n_tuples
+                   for s in rr.stage_stats}
+            assert got == ref_totals, tag
+            assert rr.dispatcher == disp.name
+            assert rr.n_workers == disp.n_workers
+        disp.close()
+
+
+def test_dispatcher_env_resolution(world, monkeypatch):
+    """STRETTO_DISPATCHER selects the dispatch layer when run_plan gets
+    no explicit dispatcher, without changing results."""
+    ds, eng, registry = world
+    q = Query([SemFilter("f1", 1)], target_recall=0.6, target_precision=0.6)
+    plan = plan_lotus(q, ds.items, registry, sample_frac=0.35)
+    backend = as_backend(registry)
+    ref = run_plan(plan, q, ds.items, backend, partition_size=25,
+                   dispatcher="inline")
+    for spec, name, workers in (("threads:2", "threads", 2),
+                                ("sharded:3", "sharded", 3),
+                                ("inline", "inline", 1)):
+        monkeypatch.setenv("STRETTO_DISPATCHER", spec)
+        rr = run_plan(plan, q, ds.items, backend, partition_size=25)
+        assert rr.dispatcher == name
+        assert rr.n_workers == workers
+        np.testing.assert_array_equal(rr.accepted, ref.accepted)
+    monkeypatch.setenv("STRETTO_DISPATCHER", "bogus")
+    with pytest.raises(ValueError):
+        run_plan(plan, q, ds.items, backend)
 
 
 def test_as_backend_passthrough(world):
