@@ -1,28 +1,28 @@
-"""Shared benchmark world: datasets, engine with cache profiles, runtime
-backends, query generation (paper §6.1: templates with 2-4 semantic
-placeholders), and gold-plan execution through the streaming runtime."""
+"""Shared benchmark world, built on the declarative Session API.
+
+A `World` is a `repro.Session` (engine lifecycle, profile building,
+backend + dispatcher resolution, gold memoization) plus the paper's
+evaluation corpora and query generator (§6.1: templates with 2-4 semantic
+placeholders). Experiments execute plans via `world.execute(...)` /
+`world.gold(...)`, which route through the session's streaming-runtime
+defaults — the same single execution path the public API uses."""
 from __future__ import annotations
 
-import tempfile
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.cache.store import CacheStore
+from repro.api import Session, SessionConfig
 from repro.core import Query, SemFilter, SemMap
 from repro.core.physical import PhysicalPlan
-from repro.data.synthetic import (Dataset, make_dataset, make_planted_params,
-                                  paper_datasets, planted_config)
-from repro.runtime import (DEFAULT_COALESCE, KVCacheBackend,
-                           ReferenceBackend, RuntimeResult, gold_plan_for)
-from repro.runtime import run_plan as _run_plan
-from repro.serving.engine import ServingEngine
+from repro.data.synthetic import Dataset, paper_datasets
+from repro.runtime import DEFAULT_COALESCE, RuntimeResult
 
 SM_RATIOS = (0.8, 0.5, 0.0)
 LG_RATIOS = (0.8, 0.6, 0.3)
-ALL_RATIOS = sorted({0.0, *SM_RATIOS, *LG_RATIOS})
+ALL_RATIOS = tuple(sorted({0.0, *SM_RATIOS, *LG_RATIOS}))
 
 # streaming defaults for benchmark executions: bounded working set with
 # engine-friendly coalesced batches (late cascade stages accumulate
@@ -35,35 +35,64 @@ COALESCE = DEFAULT_COALESCE
 
 @dataclass
 class World:
+    session: Session
     datasets: Dict[str, Dataset]
-    engine: ServingEngine
-    backend: KVCacheBackend           # full compression ladder
-    backend_nocomp: KVCacheBackend    # Exp 2 baseline: uncompressed only
-    reference: ReferenceBackend       # gold (lg @ 0.0) — quality reference
+    backend_nocomp: object      # Exp 2 baseline: uncompressed ladder only
+
+    @property
+    def engine(self):
+        return self.session.engine
+
+    @property
+    def backend(self):
+        """Full compression ladder."""
+        return self.session.backend
+
+    @property
+    def reference(self):
+        """Gold (lg @ 0.0) — the quality reference."""
+        return self.session.reference
+
+    def execute(self, plan: PhysicalPlan, query: Query, items,
+                backend=None) -> RuntimeResult:
+        """All benchmark executions go through the session's streaming
+        runtime defaults (PARTITION_SIZE / COALESCE)."""
+        return self.session.run(plan, query, items, backend)
+
+    def gold(self, query: Query, items) -> RuntimeResult:
+        """Gold execution via the reference backend, memoized per
+        (corpus, query) by the session."""
+        return self.session.gold(query, items)
+
+    def close(self):
+        self.session.close()
 
 
 def build_world(scale: float = 0.3, cache_dir: str | None = None,
-                dataset_names: Sequence[str] | None = None) -> World:
+                dataset_names: Sequence[str] | None = None,
+                config: Optional[SessionConfig] = None) -> World:
     datasets = paper_datasets(scale)
     if dataset_names:
         datasets = {k: v for k, v in datasets.items() if k in dataset_names}
-    store = CacheStore(cache_dir or tempfile.mkdtemp(prefix="stretto_cache_"))
-    eng = ServingEngine(store)
-    for size in ("sm", "lg"):
-        cfg = planted_config(size)
-        eng.register_model(size, cfg, make_planted_params(cfg, seed=1))
+    if config is None:
+        config = SessionConfig()
+    # keep every caller-declared field; override only the benchmark's
+    # fixed world shape (ladder, ratios, streaming execution defaults)
+    base = replace(
+        config,
+        cache_dir=cache_dir if cache_dir is not None else config.cache_dir,
+        profile_ratios=ALL_RATIOS, prefill_batch=48,
+        sm_ratios=SM_RATIOS, lg_ratios=LG_RATIOS,
+        partition_size=PARTITION_SIZE, coalesce=COALESCE)
+    session = Session(base)
     t0 = time.time()
     for name, ds in datasets.items():
-        for size in ("sm", "lg"):
-            eng.build_profiles(size, ds.items, ratios=ALL_RATIOS,
-                               prefill_batch=48)
+        session.prepare(ds.items)
         print(f"[world] cache profiles built for {name} "
               f"({len(ds.items)} items, {time.time() - t0:.0f}s elapsed)")
-    backend = KVCacheBackend(eng, sm_ratios=SM_RATIOS, lg_ratios=LG_RATIOS)
-    backend_nocomp = KVCacheBackend(eng, sm_ratios=(0.0,), lg_ratios=(),
-                                    include_cheap=True)
-    return World(datasets, eng, backend, backend_nocomp,
-                 ReferenceBackend(eng))
+    backend_nocomp = session.backend_for(sm_ratios=(0.0,), lg_ratios=(),
+                                         include_cheap=True)
+    return World(session, datasets, backend_nocomp)
 
 
 def generate_queries(ds: Dataset, n_queries: int, target: float,
@@ -91,20 +120,6 @@ def generate_queries(ds: Dataset, n_queries: int, target: float,
         out.append(Query(nodes, target_recall=target,
                          target_precision=target))
     return out
-
-
-def execute(plan: PhysicalPlan, query: Query, items, backend,
-            partition_size: Optional[int] = PARTITION_SIZE,
-            coalesce: Optional[int] = COALESCE) -> RuntimeResult:
-    """All benchmark executions go through the streaming runtime."""
-    return _run_plan(plan, query, items, backend,
-                     partition_size=partition_size, coalesce=coalesce)
-
-
-def execute_gold(query: Query, items, backend) -> RuntimeResult:
-    """Gold execution; pass World.reference to pin the gold-only backend,
-    or any backend whose candidate lists end in the gold operator."""
-    return execute(gold_plan_for(query, backend), query, items, backend)
 
 
 def stage_stats_rows(tag: str, result: RuntimeResult) -> List[Dict]:

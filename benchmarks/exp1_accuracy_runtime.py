@@ -12,8 +12,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import (World, execute, execute_gold,
-                               generate_queries, stage_stats_rows)
+from benchmarks.common import World, generate_queries, stage_stats_rows
 from repro.core import PlannerConfig, evaluate_vs_gold, plan_query
 from repro.core.baselines import plan_lotus, plan_pareto_cascades
 
@@ -28,7 +27,7 @@ def run(world: World, targets=(0.5, 0.7, 0.9), n_queries: int = 4,
             queries = generate_queries(ds, n_queries, target,
                                        seed=hash(ds_name) % 1000)
             for qi, q in enumerate(queries):
-                gold = execute_gold(q, ds.items, world.reference)
+                gold = world.gold(q, ds.items)
                 for method, planner in (
                         ("stretto", lambda q: plan_query(
                             q, ds.items, world.backend, planner_cfg,
@@ -41,7 +40,7 @@ def run(world: World, targets=(0.5, 0.7, 0.9), n_queries: int = 4,
                             sample_frac=sample_frac))):
                     t0 = time.perf_counter()
                     plan = planner(q)
-                    res = execute(plan, q, ds.items, world.backend)
+                    res = world.execute(plan, q, ds.items)
                     m = evaluate_vs_gold(res, gold, q.semantic_ops)
                     rows.append({
                         "dataset": ds_name, "query": qi, "target": target,

@@ -14,7 +14,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import (LG_RATIOS, SM_RATIOS, World, execute,
+from benchmarks.common import (LG_RATIOS, SM_RATIOS, World,
                                generate_queries, stage_stats_rows)
 from repro.core import PlannerConfig, plan_query
 from repro.data.synthetic import (TOK_NO, TOK_YES, filter_query_token,
@@ -68,7 +68,7 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
                                      ("nocomp", world.backend_nocomp)):
                     plan = plan_query(q, ds.items, backend, planner_cfg,
                                       sample_frac=sample_frac)
-                    res = execute(plan, q, ds.items, backend)
+                    res = world.execute(plan, q, ds.items, backend)
                     rt[tag] = res.runtime_s
                     stats += stage_stats_rows(
                         f"exp2/{ds_name}/t{target}/q{qi}/{tag}", res)

@@ -7,8 +7,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import (World, execute, execute_gold,
-                               generate_queries, stage_stats_rows)
+from benchmarks.common import World, generate_queries, stage_stats_rows
 from repro.core import PlannerConfig, evaluate_vs_gold, plan_query
 from repro.core.baselines import plan_stretto_independent, plan_stretto_local
 
@@ -22,7 +21,7 @@ def run(world: World, targets=(0.7, 0.9), n_queries: int = 3,
         for target in targets:
             queries = generate_queries(ds, n_queries, target, seed=29)
             for qi, q in enumerate(queries):
-                gold = execute_gold(q, ds.items, world.reference)
+                gold = world.gold(q, ds.items)
                 for method, planner in (
                         ("global", lambda q: plan_query(
                             q, ds.items, world.backend, planner_cfg,
@@ -34,7 +33,7 @@ def run(world: World, targets=(0.7, 0.9), n_queries: int = 3,
                             q, ds.items, world.backend, planner_cfg,
                             sample_frac=sample_frac))):
                     plan = planner(q)
-                    res = execute(plan, q, ds.items, world.backend)
+                    res = world.execute(plan, q, ds.items)
                     m = evaluate_vs_gold(res, gold, q.semantic_ops)
                     rows.append({
                         "dataset": ds_name, "target": target, "query": qi,

@@ -37,11 +37,11 @@ def main() -> None:
     ap.add_argument("--out", type=str, default="results/bench")
     args = ap.parse_args()
 
+    import repro
     from benchmarks import (exp1_accuracy_runtime as E1,
                             exp2_kv_cache as E2, exp3_global_local as E3,
                             kernels_bench, roofline)
     from benchmarks.common import build_world
-    from repro.core import PlannerConfig
 
     os.makedirs(args.out, exist_ok=True)
     t0 = time.time()
@@ -49,11 +49,12 @@ def main() -> None:
     names = None if args.full else ("movies", "artwork")
     nq = 6 if args.full else 2
     targets = (0.5, 0.7, 0.9) if args.full else (0.7, 0.9)
-    cfg = PlannerConfig(steps=300 if args.full else 200,
-                        restarts=4 if args.full else 3)
+    cfg = repro.PlannerConfig(steps=300 if args.full else 200,
+                              restarts=4 if args.full else 3)
 
     print(f"# building world (scale={scale}) ...", flush=True)
-    world = build_world(scale=scale, dataset_names=names)
+    world = build_world(scale=scale, dataset_names=names,
+                        config=repro.SessionConfig(planner=cfg))
 
     csv_rows = []
     stage_stats = []   # per-stage StageStats across all experiments: the
@@ -160,6 +161,7 @@ def main() -> None:
     for r in csv_rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     print(f"\n# total benchmark wall time: {time.time() - t0:.0f}s")
+    world.close()
 
 
 if __name__ == "__main__":

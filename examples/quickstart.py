@@ -1,68 +1,63 @@
-"""Quickstart: Stretto end to end in ~60 lines.
+"""Quickstart: Stretto end to end through the declarative API.
 
-Builds a small planted corpus, precomputes compressed KV-cache profiles
-(the paper's offline phase), plans a 2-operator semantic query under global
-quality targets with the gradient optimizer, executes the cascade plan
-through the streaming runtime (KV-cache backend, partitioned corpus,
-per-stage telemetry), and compares quality + runtime against the gold
-reference backend.
+One `Session` owns the whole engine lifecycle (cache store, planted
+models, KV-cache profile building — the paper's offline phase, backend
+and dispatcher resolution); a lazy `SemFrame` declares the query and its
+end-to-end quality guarantees once. `explain()` shows the planned
+cascade before anything runs, `execute()` runs it through the streaming
+runtime, `metrics()` lazily compares against the gold reference, and
+`stream()` delivers per-partition results incrementally.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import os
 import sys
-import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.cache.store import CacheStore
-from repro.core import (PlannerConfig, Query, SemFilter, SemMap,
-                        evaluate_vs_gold, plan_query)
-from repro.data.synthetic import (make_dataset, make_planted_params,
-                                  planted_config)
-from repro.runtime import (KVCacheBackend, ReferenceBackend, gold_plan_for,
-                           run_plan)
-from repro.serving.engine import ServingEngine
+import repro
+from repro.data.synthetic import make_dataset
 
 
 def main():
-    # --- corpus + engine with KV-cache profiles (offline phase) ----------
     ds = make_dataset("quickstart", 200, seed=3)
-    engine = ServingEngine(CacheStore(tempfile.mkdtemp()))
-    for size in ("sm", "lg"):
-        cfg = planted_config(size)
-        engine.register_model(size, cfg, make_planted_params(cfg, seed=1))
-        engine.build_profiles(size, ds.items, ratios=[0.0, 0.3, 0.5, 0.8])
-    backend = KVCacheBackend(engine, sm_ratios=(0.8, 0.5, 0.0),
-                             lg_ratios=(0.8, 0.5, 0.3))
-    reference = ReferenceBackend(engine)
-    print("offline phase done: cache ladder built for 2 models x 4 ratios")
+    config = repro.SessionConfig(
+        profile_ratios=(0.0, 0.3, 0.5, 0.8),     # offline cache ladder
+        sm_ratios=(0.8, 0.5, 0.0),               # cascade candidates
+        lg_ratios=(0.8, 0.5, 0.3),
+        planner=repro.PlannerConfig(steps=200, restarts=3),
+        sample_frac=0.25,
+        partition_size=64,                       # streaming execution
+    )
+    with repro.Session(config) as sess:
+        # --- a semantic query with global quality targets, declared once
+        frame = (sess.frame(ds)
+                 .sem_filter("mentions topic 1", task_id=1)
+                 .sem_map("extract field 2", task_id=2)
+                 .with_guarantees(recall=0.75, precision=0.75))
 
-    # --- a semantic query with global quality targets ---------------------
-    q = Query([SemFilter("mentions topic 1", 1),
-               SemMap("extract field 2", 2)],
-              target_recall=0.75, target_precision=0.75)
+        # --- EXPLAIN: the planned cascade, before anything executes ----
+        print(frame.explain())
 
-    # gold reference: the same plan shape, resolved by the gold-only backend
-    gold = run_plan(gold_plan_for(q, reference), q, ds.items, reference)
+        # --- execute through the streaming runtime ---------------------
+        res = frame.execute()
+        m = res.metrics()                        # lazy gold comparison
+        print(f"quality vs gold: precision={m['precision']:.3f} "
+              f"recall={m['recall']:.3f} (targets 0.75)")
+        print(f"runtime: {res.runtime_s:.2f}s "
+              f"-> speedup {res.speedup_vs_gold():.2f}x vs gold "
+              f"({res.n_partitions} partitions)")
+        print("per-stage telemetry:")
+        for st in res.stage_stats:
+            print(f"  {st.op_name:12s} tuples={st.n_tuples:4d} "
+                  f"batches={st.n_batches} wall={st.wall_s * 1e3:7.1f}ms "
+                  f"kv={st.kv_bytes / 1e6:6.1f}MB llm_calls={st.n_llm_calls}")
 
-    # --- Stretto: plan + execute through the streaming runtime ------------
-    plan = plan_query(q, ds.items, backend,
-                      PlannerConfig(steps=200, restarts=3),
-                      sample_frac=0.25)
-    print(plan.describe())
-    res = run_plan(plan, q, ds.items, backend, partition_size=64)
-    m = evaluate_vs_gold(res, gold, q.semantic_ops)
-    print(f"quality vs gold: precision={m['precision']:.3f} "
-          f"recall={m['recall']:.3f} (targets {q.target_precision})")
-    print(f"runtime: {res.runtime_s:.2f}s vs gold {gold.runtime_s:.2f}s "
-          f"-> speedup {gold.runtime_s / max(res.runtime_s, 1e-9):.2f}x "
-          f"({res.n_partitions} partitions)")
-    print("per-stage telemetry:")
-    for st in res.stage_stats:
-        print(f"  {st.op_name:12s} tuples={st.n_tuples:4d} "
-              f"batches={st.n_batches} wall={st.wall_s * 1e3:7.1f}ms "
-              f"kv={st.kv_bytes / 1e6:6.1f}MB llm_calls={st.n_llm_calls}")
+        # --- streaming: consume partitions as they settle --------------
+        print("streaming the same query, 50 tuples per partition:")
+        for part in frame.stream(partition_size=50):
+            print(f"  partition {part.index} [{part.lo}:{part.hi}) "
+                  f"-> {int(part.accepted.sum())} accepted")
 
 
 if __name__ == "__main__":

@@ -1,68 +1,69 @@
 """End-to-end serving driver: batched semantic-operator requests over
 precomputed KV-cache profiles (the paper's system kind).
 
-Simulates a query workload against a corpus: builds the cache repository
-once (offline), then serves a stream of filter/map requests at several
-compression profiles, reporting throughput and the runtime-vs-quality
-ladder the optimizer navigates.
+A `Session` owns the offline phase (cache store, model registration,
+profile building for the ladder); the request loop then drives the
+serving engine directly — this example measures the raw serving layer
+(throughput per compression profile), one level below the SemFrame query
+API that `examples/quickstart.py` shows.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
 import os
 import sys
-import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.cache.store import CacheStore, Profile
+import repro
+from repro.cache.store import Profile
 from repro.data.synthetic import (N_VALUES, TOK_NO, TOK_YES,
                                   filter_query_token, make_dataset,
-                                  make_planted_params, map_query_token,
-                                  planted_config, value_token)
-from repro.serving.engine import ServingEngine
+                                  map_query_token, value_token)
+
+RATIOS = (0.0, 0.5, 0.8)
 
 
 def main():
     ds = make_dataset("serve", 300, seed=9)
-    engine = ServingEngine(CacheStore(tempfile.mkdtemp()),
-                           memory_budget_bytes=5e8)
-    t0 = time.time()
-    for size in ("sm", "lg"):
-        cfg = planted_config(size)
-        engine.register_model(size, cfg, make_planted_params(cfg, seed=1))
-        engine.build_profiles(size, ds.items, ratios=[0.0, 0.5, 0.8])
-    t_offline = time.time() - t0
-    print(f"offline: caches for {len(ds.items)} items x 2 models x 3 "
-          f"ratios in {t_offline:.1f}s")
-    for size in ("sm", "lg"):
-        for r in (0.0, 0.5, 0.8):
-            mb = engine.store.storage_bytes(Profile(size, r)) / 1e6
-            print(f"  profile {size}-r{r}: {mb:.1f} MB on disk")
+    config = repro.SessionConfig(memory_budget_bytes=5e8,
+                                 profile_ratios=RATIOS)
+    with repro.Session(config) as sess:
+        t0 = time.time()
+        sess.prepare(ds.items)                   # offline phase
+        engine = sess.engine
+        print(f"offline: caches for {len(ds.items)} items x "
+              f"{len(config.models)} models x {len(RATIOS)} ratios "
+              f"in {time.time() - t0:.1f}s")
+        for size in config.models:
+            for r in RATIOS:
+                mb = engine.store.storage_bytes(Profile(size, r)) / 1e6
+                print(f"  profile {size}-r{r}: {mb:.1f} MB on disk")
 
-    ids = [it.item_id for it in ds.items]
-    labels = np.array([it.labels[1] for it in ds.items])
-    print("\nserving 6 batched filter requests across the ladder:")
-    for size in ("sm", "lg"):
-        for r in (0.0, 0.5, 0.8):
-            t0 = time.time()
-            lo = engine.run_filter(size, r, ids, [filter_query_token(1)],
-                                   TOK_YES, TOK_NO)
-            dt = time.time() - t0
-            acc = ((lo > 0) == labels).mean()
-            print(f"  {size}-r{r}: {len(ids) / dt:7.0f} items/s  "
-                  f"acc={acc:.3f}")
+        ids = [it.item_id for it in ds.items]
+        labels = np.array([it.labels[1] for it in ds.items])
+        print("\nserving 6 batched filter requests across the ladder:")
+        for size in config.models:
+            for r in RATIOS:
+                t0 = time.time()
+                lo = engine.run_filter(size, r, ids,
+                                       [filter_query_token(1)],
+                                       TOK_YES, TOK_NO)
+                dt = time.time() - t0
+                acc = ((lo > 0) == labels).mean()
+                print(f"  {size}-r{r}: {len(ids) / dt:7.0f} items/s  "
+                      f"acc={acc:.3f}")
 
-    print("\nbatched map request (gold profile):")
-    t0 = time.time()
-    vals, conf = engine.run_map("lg", 0.0, ids, [map_query_token(2)],
-                                [value_token(v) for v in range(N_VALUES)])
-    dt = time.time() - t0
-    want = np.array([value_token(it.map_vals[2]) for it in ds.items])
-    print(f"  {len(ids) / dt:.0f} items/s, value acc vs latent "
-          f"{np.mean(vals == want):.3f}")
+        print("\nbatched map request (gold profile):")
+        t0 = time.time()
+        vals, conf = engine.run_map("lg", 0.0, ids, [map_query_token(2)],
+                                    [value_token(v) for v in range(N_VALUES)])
+        dt = time.time() - t0
+        want = np.array([value_token(it.map_vals[2]) for it in ds.items])
+        print(f"  {len(ids) / dt:.0f} items/s, value acc vs latent "
+              f"{np.mean(vals == want):.3f}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,59 @@
 """repro — Stretto execution engine reproduction on JAX/TPU.
 
+The documented entry point is the declarative API::
+
+    import repro
+    with repro.Session() as sess:
+        result = (sess.frame(items)
+                  .sem_filter("mentions topic 1", task_id=1)
+                  .with_guarantees(recall=0.9, precision=0.9)
+                  .execute())
+
 Layers:
+  repro.api       — Session / SemFrame / EXPLAIN / streaming results
+                    (the single front door; compiles to the layers below)
   repro.core      — the paper's contribution (global optimizer + plan layer)
+  repro.runtime   — streaming plan execution, backends, dispatch
   repro.models    — config-driven model zoo (10 assigned archs + paper arch)
   repro.cache     — KV-cache profiles (Expected-Attention compression ladder)
   repro.serving   — prefill-skip batched execution engine
   repro.kernels   — Pallas TPU kernels + jnp oracles
   repro.training  — train step / optimizer / checkpoints / fault tolerance
   repro.launch    — meshes, dry-run, launchers
+
+Top-level attribute access is lazy (PEP 562): ``import repro`` stays
+dependency-free; the api/serving stack (and jax) load on first use.
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_EXPORTS = {
+    "Session": "repro.api",
+    "SessionConfig": "repro.api",
+    "SemFrame": "repro.api",
+    "ExplainReport": "repro.api",
+    "ExplainStage": "repro.api",
+    "QueryResult": "repro.api",
+    "ResultStream": "repro.api",
+    "PartitionResult": "repro.runtime",
+    "PlannerConfig": "repro.core",
+    "Query": "repro.core",
+    "SemFilter": "repro.core",
+    "SemMap": "repro.core",
+    "RelFilter": "repro.core",
+}
+
+__all__ = sorted(_EXPORTS) + ["__version__"]
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(_EXPORTS[name])
+        value = getattr(mod, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,33 @@
+"""repro.api — the declarative front door to the Stretto engine.
+
+One import gives the whole query lifecycle::
+
+    from repro.api import Session, SessionConfig
+
+    with Session(SessionConfig(partition_size=256)) as sess:
+        frame = (sess.frame(corpus)
+                 .sem_filter("mentions topic 1", task_id=1)
+                 .sem_map("extract field 2", task_id=2)
+                 .with_guarantees(recall=0.75, precision=0.75))
+        print(frame.explain())          # plan + cascade table, no execution
+        result = frame.execute()        # streaming runtime, full corpus
+        print(result.metrics())         # lazy gold comparison
+        for part in frame.stream():     # per-partition incremental results
+            ...
+
+Layering: `Session` owns the engine lifecycle (cache store, model
+registration, profile building, backend + dispatcher resolution);
+`SemFrame` is a lazy immutable builder that compiles to the stable
+internal layer (`core.logical.Query` -> `core.planner.plan_query` ->
+`runtime.executor.run_plan`/`iter_plan`). The internal layer stays public
+and supported — the api package adds no planning or execution logic of
+its own, so everything the parity tests pin (bit-identical decisions,
+equal plan stages) holds by construction.
+"""
+from repro.api.explain import ExplainReport, ExplainStage
+from repro.api.frame import SemFrame
+from repro.api.result import QueryResult, ResultStream
+from repro.api.session import Session, SessionConfig
+
+__all__ = ["ExplainReport", "ExplainStage", "QueryResult", "ResultStream",
+           "SemFrame", "Session", "SessionConfig"]

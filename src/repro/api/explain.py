@@ -1,0 +1,148 @@
+"""EXPLAIN for semantic queries: structured plan report + table renderer.
+
+`SemFrame.explain()` returns an ExplainReport — the logical plan, the
+physical cascade in execution order (thresholds, expected coalesced batch,
+batch-aware per-tuple cost), the planner's Bayesian quality bounds and
+feasibility verdict, and the execution configuration the session would
+run it with. `str(report)` renders the table; `.rows()` gives the stage
+table as dicts for programmatic use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.logical import Query, RelFilter, SemFilter, SemMap
+from repro.core.physical import PhysicalPlan
+
+
+@dataclass(frozen=True)
+class ExplainStage:
+    """One physical cascade stage, in execution order."""
+    order: int                 # position in the execution schedule
+    logical_idx: int           # which logical operator it implements
+    stage: int                 # position within that operator's cascade
+    op_name: str               # physical operator (model @ compression)
+    kind: str                  # "filter" | "map"
+    is_gold: bool
+    thr_lo: float              # reject below (filters) / n.a. (maps)
+    thr_hi: float              # accept above / commit above (maps)
+    cost_per_tuple_s: float    # batch-aware effective per-tuple cost
+    exp_batch: float           # expected coalesced flush size (0: n/a)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"order": self.order, "logical_idx": self.logical_idx,
+                "stage": self.stage, "op_name": self.op_name,
+                "kind": self.kind, "is_gold": self.is_gold,
+                "thr_lo": self.thr_lo, "thr_hi": self.thr_hi,
+                "cost_per_tuple_s": self.cost_per_tuple_s,
+                "exp_batch": self.exp_batch}
+
+
+def _describe_node(node) -> str:
+    if isinstance(node, SemFilter):
+        return f"SemFilter {node.text!r} (task {node.task_id})"
+    if isinstance(node, SemMap):
+        return (f"SemMap {node.text!r} (task {node.task_id} "
+                f"-> {node.out_column!r})")
+    if isinstance(node, RelFilter):
+        return f"RelFilter {node.column} {node.op} {node.value!r}"
+    return repr(node)
+
+
+@dataclass(frozen=True)
+class ExplainReport:
+    """Structured EXPLAIN output for one (query, corpus, session)."""
+    n_items: int
+    target_recall: float
+    target_precision: float
+    logical: Tuple[str, ...]            # declared plan, user order
+    relational: Tuple[str, ...]         # pulled-up relational prefilters
+    stages: Tuple[ExplainStage, ...]    # physical cascade, execution order
+    est_cost_s: float                   # planner's full-corpus estimate
+    recall_bound: float                 # Bayesian lower bounds the plan
+    precision_bound: float              # certifies at the credibility level
+    feasible: bool                      # targets attainable on the sample
+    planning_time_s: float
+    backend: str                        # runtime backend name
+    dispatcher: str                     # session execution defaults
+    partition_size: Optional[int]
+    coalesce: Optional[int]
+
+    @classmethod
+    def from_plan(cls, session, query: Query, items: Sequence[Any],
+                  plan: PhysicalPlan) -> "ExplainReport":
+        from repro.runtime.dispatch import DEFAULT_COALESCE, effective_spec
+        cfg = session.config
+        stages = tuple(
+            ExplainStage(
+                order=i, logical_idx=st.logical_idx, stage=st.stage,
+                op_name=st.op_name, kind="map" if st.is_map else "filter",
+                is_gold=st.is_gold, thr_lo=st.thr_lo, thr_hi=st.thr_hi,
+                cost_per_tuple_s=st.cost, exp_batch=st.exp_batch)
+            for i, st in enumerate(plan.stages))
+        return cls(
+            n_items=len(items),
+            target_recall=query.target_recall,
+            target_precision=query.target_precision,
+            logical=tuple(_describe_node(n) for n in query.nodes),
+            relational=tuple(_describe_node(r) for r in plan.relational),
+            stages=stages,
+            est_cost_s=plan.est_cost,
+            recall_bound=plan.recall_bound,
+            precision_bound=plan.precision_bound,
+            feasible=plan.feasible,
+            planning_time_s=plan.planning_time_s,
+            backend=getattr(session.backend, "name", "backend"),
+            dispatcher=effective_spec(cfg.dispatcher),
+            partition_size=cfg.partition_size,
+            coalesce=cfg.coalesce if cfg.coalesce is not None
+            else DEFAULT_COALESCE)
+
+    def rows(self) -> List[Dict[str, Any]]:
+        """The stage table as dicts (execution order)."""
+        return [s.as_dict() for s in self.stages]
+
+    # ---------------- rendering ----------------
+
+    def render(self) -> str:
+        head = (f"EXPLAIN — {len(self.logical)} operators over "
+                f"{self.n_items} items, guarantees R>={self.target_recall} "
+                f"P>={self.target_precision}")
+        out = [head, "logical plan (declared order):"]
+        out += [f"  {i}: {d}" for i, d in enumerate(self.logical)]
+        if self.relational:
+            out.append("relational prefilters (pulled up, run first):")
+            out += [f"  {d}" for d in self.relational]
+        verdict = "feasible" if self.feasible else "INFEASIBLE on sample"
+        out.append(
+            f"physical cascade ({verdict}, est_cost={self.est_cost_s:.2f}s,"
+            f" bounds R>={self.recall_bound:.3f} "
+            f"P>={self.precision_bound:.3f}, "
+            f"planned in {self.planning_time_s:.2f}s):")
+        cols = [("#", 2), ("op", 24), ("L/s", 5), ("kind", 6),
+                ("thr_lo", 7), ("thr_hi", 7), ("cost/t", 9), ("batch", 6)]
+        out.append("  " + " ".join(f"{name:>{w}}" for name, w in cols))
+        for s in self.stages:
+            gold = " [gold]" if s.is_gold else ""
+            out.append("  " + " ".join([
+                f"{s.order:>2}",
+                f"{s.op_name + gold:>24}",
+                f"{f'{s.logical_idx}/{s.stage}':>5}",
+                f"{s.kind:>6}",
+                "     --" if s.is_gold else f"{s.thr_lo:>+7.2f}",
+                "     --" if s.is_gold else f"{s.thr_hi:>+7.2f}",
+                f"{s.cost_per_tuple_s * 1e3:>7.2f}ms",
+                f"{s.exp_batch:>6.0f}" if s.exp_batch else "    --",
+            ]))
+        psize = self.partition_size if self.partition_size is not None \
+            else "whole-corpus"
+        out.append(
+            f"execution: backend={self.backend} "
+            f"dispatcher={self.dispatcher} "
+            f"partition_size={psize} "
+            f"coalesce={self.coalesce}")
+        return "\n".join(out)
+
+    def __str__(self) -> str:
+        return self.render()

@@ -1,0 +1,153 @@
+"""Query results: enriched wrapper over the runtime's RuntimeResult.
+
+QueryResult delegates the raw execution fields (`accepted`, `map_values`,
+`stage_stats`, ...) and adds the query-level conveniences the examples
+and benchmarks kept re-implementing: lazy gold comparison
+(`.metrics()` — the gold execution runs at most once per (corpus, query),
+memoized by the Session), accepted-item access, and speedup reporting.
+
+ResultStream is the `.stream()` terminal verb's iterator: it yields
+PartitionResult objects as partitions settle, and exposes the
+whole-corpus QueryResult as `.result` once the stream finishes (accessing
+it early drains the remaining partitions).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.executor import evaluate_vs_gold
+from repro.core.logical import Query
+from repro.runtime.executor import (PartitionResult, RuntimeResult,
+                                    StageStats)
+
+
+class QueryResult:
+    """Result of executing a SemFrame (or a plan) over a corpus."""
+
+    def __init__(self, session, query: Query, items: Sequence[Any],
+                 raw: RuntimeResult):
+        self.session = session
+        self.query = query
+        self.items = items
+        self.raw = raw
+        self._metrics_cache: Optional[Dict[str, float]] = None
+
+    # ---------------- raw execution fields ----------------
+
+    @property
+    def accepted(self) -> np.ndarray:
+        return self.raw.accepted
+
+    @property
+    def map_values(self) -> Dict[int, np.ndarray]:
+        return self.raw.map_values
+
+    @property
+    def runtime_s(self) -> float:
+        return self.raw.runtime_s
+
+    @property
+    def stage_stats(self) -> List[StageStats]:
+        return self.raw.stage_stats
+
+    @property
+    def n_llm_tuples(self) -> int:
+        return self.raw.n_llm_tuples
+
+    @property
+    def n_partitions(self) -> int:
+        return self.raw.n_partitions
+
+    @property
+    def dispatcher(self) -> str:
+        return self.raw.dispatcher
+
+    # ---------------- conveniences ----------------
+
+    def matches(self) -> List[Any]:
+        """The accepted corpus items, in corpus order."""
+        return [it for it, ok in zip(self.items, self.accepted) if ok]
+
+    def gold(self) -> "QueryResult":
+        """The gold reference execution for the same (query, corpus) —
+        memoized by the session, so repeated calls are free."""
+        raw = self.session.gold(self.query, self.items)
+        return QueryResult(self.session, self.query, self.items, raw)
+
+    def metrics(self, vs: Any = None) -> Dict[str, float]:
+        """Global precision/recall (+ tp/fp/fn) of this result.
+
+        vs=None compares against the session's gold reference execution
+        (computed lazily, once). Pass another QueryResult/RuntimeResult
+        to compare against that instead.
+        """
+        if vs is None:
+            if self._metrics_cache is None:
+                self._metrics_cache = evaluate_vs_gold(
+                    self.raw, self.session.gold(self.query, self.items),
+                    self.query.semantic_ops)
+            return self._metrics_cache
+        ref = vs.raw if isinstance(vs, QueryResult) else vs
+        return evaluate_vs_gold(self.raw, ref, self.query.semantic_ops)
+
+    def speedup_vs_gold(self) -> float:
+        """Measured-runtime speedup over the gold reference execution."""
+        gold = self.session.gold(self.query, self.items)
+        return gold.runtime_s / max(self.raw.runtime_s, 1e-9)
+
+    def __len__(self) -> int:
+        return int(self.accepted.sum())
+
+    def __repr__(self) -> str:
+        return (f"QueryResult({int(self.accepted.sum())}/"
+                f"{self.accepted.size} accepted, "
+                f"runtime={self.runtime_s:.2f}s, "
+                f"partitions={self.n_partitions})")
+
+
+class ResultStream(Iterator[PartitionResult]):
+    """Iterator over per-partition results; `.result` is the final
+    whole-corpus QueryResult (draining any unconsumed partitions)."""
+
+    def __init__(self, session, query: Query, items: Sequence[Any], gen):
+        self.session = session
+        self.query = query
+        self.items = items
+        self._gen = gen
+        self._final: Optional[QueryResult] = None
+        self._closed = False
+
+    def __iter__(self) -> "ResultStream":
+        return self
+
+    def __next__(self) -> PartitionResult:
+        if self._final is not None or self._closed:
+            raise StopIteration
+        try:
+            return next(self._gen)
+        except StopIteration as stop:
+            self._final = QueryResult(self.session, self.query, self.items,
+                                      stop.value)
+            raise StopIteration from None
+
+    @property
+    def result(self) -> QueryResult:
+        """The whole-corpus QueryResult; exhausts the stream if partitions
+        remain unconsumed."""
+        while self._final is None:
+            if self._closed:
+                raise RuntimeError("ResultStream was closed before the "
+                                   "execution finished")
+            try:
+                next(self)
+            except StopIteration:
+                break
+        assert self._final is not None
+        return self._final
+
+    def close(self) -> None:
+        """Abandon the stream without executing remaining partitions."""
+        self._closed = True
+        self._gen.close()

@@ -1,0 +1,316 @@
+"""Session: engine lifecycle + configuration behind the declarative API.
+
+A Session owns everything `examples/quickstart.py` used to hand-wire:
+the CacheStore, the ServingEngine, planted-model registration, KV-cache
+profile building (the paper's offline phase), runtime backend
+construction, and the planner/executor configuration — all declared once
+in a `SessionConfig`. Queries are built against it with
+``session.frame(items)`` (see repro.api.frame).
+
+The Session compiles to, and never bypasses, the stable internal layer:
+plans come from `core.planner.plan_query`, execution goes through
+`runtime.executor.run_plan`/`iter_plan`, gold references through
+`runtime.plan_utils.gold_plan_for`. It adds lifecycle + memoization only
+(profile building per corpus, gold executions per (corpus, query)).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.core.logical import Query
+from repro.core.optimizer import PlannerConfig
+from repro.core.planner import plan_query
+from repro.core.physical import PhysicalPlan
+from repro.runtime.backend import Backend, as_backend
+from repro.runtime.dispatch import DEFAULT_COALESCE
+from repro.runtime.executor import RuntimeResult, iter_plan, run_plan
+from repro.runtime.plan_utils import gold_plan_for
+
+_UNSET = object()     # "inherit the session default" sentinel
+
+
+@dataclass(frozen=True)
+class SessionConfig:
+    """Everything a Session needs, declared once.
+
+    Engine / offline phase
+      cache_dir        — on-disk cache store root (None: fresh tempdir,
+                         removed when the session closes)
+      models           — planted-zoo model names to register
+      profile_ratios   — compression ladder to prefill (None: union of the
+                         backend ladders below, plus 0.0 for gold)
+      prefill_batch    — items per prefill call during profile building
+      memory_budget_bytes / max_batch — serving engine limits
+
+    Backend (cascade candidate ladder)
+      sm_ratios / lg_ratios / include_cheap — KVCacheBackend ladder
+
+    Planner
+      planner          — PlannerConfig (None: library defaults, per call)
+      sample_frac      — profiling sample fraction
+      seed             — profiling sample seed
+      reorder          — enable the DP/greedy stage reorderer
+
+    Execution
+      partition_size   — tuples ingested per streaming step (None: whole
+                         corpus at once)
+      coalesce         — min pending tuples before a stage flush (None:
+                         DEFAULT_COALESCE; also what the planner's
+                         batch-aware cost model amortizes over)
+      dispatcher       — runtime dispatcher spec ("inline" |
+                         "threads[:N]" | "sharded[:N]"), a Dispatcher
+                         instance, or None to read STRETTO_DISPATCHER
+    """
+    cache_dir: Optional[str] = None
+    models: Tuple[str, ...] = ("sm", "lg")
+    profile_ratios: Optional[Tuple[float, ...]] = None
+    prefill_batch: int = 16
+    memory_budget_bytes: float = 2e9
+    max_batch: int = 128
+    model_seed: int = 1
+
+    sm_ratios: Tuple[float, ...] = (0.8, 0.5, 0.0)
+    lg_ratios: Tuple[float, ...] = (0.8, 0.5, 0.3)
+    include_cheap: bool = True
+
+    planner: Optional[PlannerConfig] = None
+    sample_frac: float = 0.15
+    seed: int = 0
+    reorder: bool = True
+
+    partition_size: Optional[int] = None
+    coalesce: Optional[int] = None
+    dispatcher: Optional[Any] = None
+
+    def ladder(self) -> Tuple[float, ...]:
+        """The compression ratios profiles are built at (gold 0.0 always
+        included — the reference backend needs it)."""
+        if self.profile_ratios is not None:
+            return tuple(sorted({0.0, *self.profile_ratios}))
+        return tuple(sorted({0.0, *self.sm_ratios, *self.lg_ratios}))
+
+
+class Session:
+    """Context-managed front door to the engine.
+
+    Three construction modes:
+
+      Session()                      — owns everything: fresh cache store,
+                                       planted models, profiles built
+                                       lazily per corpus on first use
+      Session(engine=eng)            — adopts an existing ServingEngine
+                                       (models/profiles are the caller's;
+                                       call .prepare(items) if needed)
+      Session(backend=b)             — wraps any runtime Backend (e.g. an
+                                       OracleBackend over a registry);
+                                       no engine, no profile building —
+                                       gold references come from the
+                                       backend's own gold operators
+    """
+
+    def __init__(self, config: Optional[SessionConfig] = None, *,
+                 engine=None, backend=None, reference=None, **overrides):
+        if config is None:
+            config = SessionConfig(**overrides)
+        elif overrides:
+            config = replace(config, **overrides)
+        self.config = config
+        self._closed = False
+        self._owned_cache_dir: Optional[str] = None
+        self._prepared: set = set()
+        self._gold_cache: Dict[Any, RuntimeResult] = {}
+        self._plan_cache: Dict[Any, PhysicalPlan] = {}
+
+        self._owns_engine = engine is None and backend is None
+        if backend is not None and engine is None:
+            self.engine = None
+        else:
+            self.engine = engine if engine is not None \
+                else self._build_engine()
+        self.backend: Backend = as_backend(backend) \
+            if backend is not None else self.backend_for()
+        if reference is not None:
+            self.reference = as_backend(reference)
+        elif self.engine is not None:
+            from repro.runtime.backend import ReferenceBackend
+            self.reference = ReferenceBackend(self.engine)
+        else:
+            # no engine: the backend's own gold operators (candidates
+            # list, gold last) are the reference
+            self.reference = self.backend
+
+    # ---------------- lifecycle ----------------
+
+    def _build_engine(self):
+        from repro.cache.store import CacheStore
+        from repro.data.synthetic import make_planted_params, planted_config
+        from repro.serving.engine import ServingEngine
+        cfg = self.config
+        cache_dir = cfg.cache_dir
+        if cache_dir is None:
+            cache_dir = tempfile.mkdtemp(prefix="stretto_session_")
+            self._owned_cache_dir = cache_dir
+        engine = ServingEngine(CacheStore(cache_dir),
+                               memory_budget_bytes=cfg.memory_budget_bytes,
+                               max_batch=cfg.max_batch)
+        for name in cfg.models:
+            mcfg = planted_config(name)
+            engine.register_model(
+                name, mcfg, make_planted_params(mcfg, seed=cfg.model_seed))
+        return engine
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Release session-owned resources (idempotent). Only cache
+        directories the session created itself are removed."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._owned_cache_dir is not None:
+            shutil.rmtree(self._owned_cache_dir, ignore_errors=True)
+
+    # ---------------- offline phase ----------------
+
+    @staticmethod
+    def _corpus_key(items: Sequence[Any]) -> Tuple:
+        """Cheap corpus fingerprint for profile/plan/gold memoization:
+        length plus (item_id, lead token) at a spread of sample
+        positions. Items without an `item_id` fall back to object
+        identity — distinct same-length corpora must never share a key
+        (over-invalidation is safe, collision is not)."""
+        n = len(items)
+        step = max(n // 16, 1)
+        probe = []
+        for it in items[::step]:
+            toks = getattr(it, "tokens", None)
+            lead = toks[0] if toks is not None and len(toks) else None
+            item_id = getattr(it, "item_id", None)
+            probe.append((item_id if item_id is not None else id(it), lead))
+        return (n, tuple(probe))
+
+    def prepare(self, items: Sequence[Any],
+                ratios: Optional[Sequence[float]] = None) -> None:
+        """Build KV-cache profiles for this corpus (offline phase). Safe
+        to call repeatedly — each (corpus, ladder) is built once."""
+        if self.engine is None:
+            return                      # backend-only session: nothing to do
+        ladder = tuple(sorted({0.0, *(ratios or self.config.ladder())}))
+        key = (self._corpus_key(items), ladder)
+        if key in self._prepared:
+            return
+        for name in self.config.models:
+            self.engine.build_profiles(
+                name, items, ratios=list(ladder),
+                prefill_batch=self.config.prefill_batch)
+        self._prepared.add(key)
+
+    def _ensure_prepared(self, items: Sequence[Any]) -> None:
+        # adopted engines manage their own profiles; session-owned
+        # engines build lazily on first use of a corpus
+        if self._owns_engine:
+            self.prepare(items)
+
+    # ---------------- backends ----------------
+
+    def backend_for(self, *, sm_ratios: Optional[Tuple[float, ...]] = None,
+                    lg_ratios: Optional[Tuple[float, ...]] = None,
+                    include_cheap: Optional[bool] = None) -> Backend:
+        """A KVCacheBackend over the session engine with an alternative
+        candidate ladder (defaults: the session config's ladder)."""
+        if self.engine is None:
+            raise RuntimeError("session has no engine: it wraps an "
+                               "externally supplied backend")
+        from repro.runtime.backend import KVCacheBackend
+        cfg = self.config
+        return KVCacheBackend(
+            self.engine,
+            sm_ratios=sm_ratios if sm_ratios is not None else cfg.sm_ratios,
+            lg_ratios=lg_ratios if lg_ratios is not None else cfg.lg_ratios,
+            include_cheap=cfg.include_cheap if include_cheap is None
+            else include_cheap)
+
+    # ---------------- query building ----------------
+
+    def frame(self, items: Sequence[Any], query: Optional[Query] = None):
+        """A lazy SemFrame over `items` (a sequence of corpus items, or
+        anything exposing `.items` such as a Dataset). Pass `query` to
+        seed the frame from an existing logical Query."""
+        from repro.api.frame import SemFrame
+        items = getattr(items, "items", items)
+        if query is not None:
+            return SemFrame(self, items, tuple(query.nodes),
+                            query.target_recall, query.target_precision)
+        return SemFrame(self, items)
+
+    # ---------------- internal layer (plan / execute / gold) ----------
+
+    def _exec_kwargs(self, partition_size=_UNSET, coalesce=_UNSET,
+                     dispatcher=_UNSET) -> Dict[str, Any]:
+        cfg = self.config
+        return {
+            "partition_size": cfg.partition_size
+            if partition_size is _UNSET else partition_size,
+            "coalesce": cfg.coalesce if coalesce is _UNSET else coalesce,
+            "dispatcher": cfg.dispatcher
+            if dispatcher is _UNSET else dispatcher,
+        }
+
+    def plan(self, query: Query, items: Sequence[Any]) -> PhysicalPlan:
+        """Plan `query` over `items` with the session's planner settings
+        (memoized per (corpus, query) — explain + execute share a plan)."""
+        self._ensure_prepared(items)
+        key = (self._corpus_key(items), tuple(query.nodes),
+               query.target_recall, query.target_precision)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            cfg = self.config
+            plan = plan_query(
+                query, items, self.backend, cfg.planner,
+                sample_frac=cfg.sample_frac, seed=cfg.seed,
+                reorder=cfg.reorder,
+                coalesce=cfg.coalesce if cfg.coalesce is not None
+                else DEFAULT_COALESCE)
+            self._plan_cache[key] = plan
+        return plan
+
+    def run(self, plan: PhysicalPlan, query: Query, items: Sequence[Any],
+            backend: Optional[Backend] = None, *, partition_size=_UNSET,
+            coalesce=_UNSET, dispatcher=_UNSET) -> RuntimeResult:
+        """Execute a prebuilt plan through the streaming runtime with the
+        session's execution defaults."""
+        self._ensure_prepared(items)
+        return run_plan(plan, query, items, backend or self.backend,
+                        **self._exec_kwargs(partition_size, coalesce,
+                                            dispatcher))
+
+    def iter_run(self, plan: PhysicalPlan, query: Query,
+                 items: Sequence[Any], backend: Optional[Backend] = None, *,
+                 partition_size=_UNSET, coalesce=_UNSET, dispatcher=_UNSET):
+        """Generator form of `run` (yields PartitionResult per settled
+        partition; StopIteration.value is the RuntimeResult)."""
+        self._ensure_prepared(items)
+        return iter_plan(plan, query, items, backend or self.backend,
+                         **self._exec_kwargs(partition_size, coalesce,
+                                             dispatcher))
+
+    def gold(self, query: Query, items: Sequence[Any]) -> RuntimeResult:
+        """The gold reference execution for `query` over `items` (every
+        semantic op resolved by the reference backend's gold operator),
+        memoized per (corpus, query nodes)."""
+        self._ensure_prepared(items)
+        key = (self._corpus_key(items), tuple(query.nodes))
+        got = self._gold_cache.get(key)
+        if got is None:
+            gold_plan = gold_plan_for(query, self.reference)
+            got = run_plan(gold_plan, query, items, self.reference,
+                           **self._exec_kwargs())
+            self._gold_cache[key] = got
+        return got

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import itertools
 import time
-from typing import Any, Callable, List, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -234,10 +234,11 @@ def plan_pareto_cascades(query: Query, items, registry,
 # ---------------------------------------------------------------------------
 
 def plan_stretto_local(query: Query, items, registry,
-                       cfg: PlannerConfig = PlannerConfig(),
+                       cfg: Optional[PlannerConfig] = None,
                        sample_frac: float = 0.15, seed: int = 0
                        ) -> PhysicalPlan:
     """Gradient optimizer per logical operator with evenly split targets."""
+    cfg = cfg if cfg is not None else PlannerConfig()
     t0 = time.perf_counter()
     query = pull_up_semantic(query)
     profiles, _ = profile_query(query, items, registry, sample_frac, seed)
@@ -270,11 +271,12 @@ def plan_stretto_local(query: Query, items, registry,
 
 
 def plan_stretto_independent(query: Query, items, registry,
-                             cfg: PlannerConfig = PlannerConfig(),
+                             cfg: Optional[PlannerConfig] = None,
                              sample_frac: float = 0.15, seed: int = 0
                              ) -> PhysicalPlan:
     """Joint gradient optimization, but the global bound is the product of
     per-operator bounds at credibility alpha^(1/m) (independence)."""
+    cfg = cfg if cfg is not None else PlannerConfig()
     t0 = time.perf_counter()
     query = pull_up_semantic(query)
     profiles, _ = profile_query(query, items, registry, sample_frac, seed)

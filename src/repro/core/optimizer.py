@@ -93,12 +93,15 @@ def init_pipeline_params(data: R.PipelineData, pick0: float = 0.5,
 def optimize_query(pipelines: Sequence[R.PipelineData],
                    gold_membership: np.ndarray,
                    target_recall: float, target_precision: float,
-                   cfg: PlannerConfig = PlannerConfig(),
+                   cfg: Optional[PlannerConfig] = None,
                    batch_hint: Optional[R.BatchHint] = None
                    ) -> OptimizedPlan:
     """batch_hint activates the batch-size-aware cost model for pipelines
     carrying fixed per-call costs (see relaxation.BatchHint); pipelines
     without `fixed` data are costed exactly as before."""
+    # default constructed per call — a shared default instance would leak
+    # mutations between unrelated optimizations
+    cfg = cfg if cfg is not None else PlannerConfig()
     pipelines = list(pipelines)
     sizes = [p.scores.shape[0] for p in pipelines]
     g = jnp.asarray(gold_membership, jnp.float32)

@@ -7,7 +7,7 @@ shared with the baselines live in repro.runtime.plan_utils.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, List, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -23,10 +23,13 @@ from repro.runtime.plan_utils import (estimate_selectivities,
 
 
 def plan_query(query: Query, items: Sequence[Any], registry: Callable,
-               cfg: PlannerConfig = PlannerConfig(),
+               cfg: Optional[PlannerConfig] = None,
                sample_frac: float = 0.15, seed: int = 0,
                reorder: bool = True,
                coalesce: int = DEFAULT_COALESCE) -> PhysicalPlan:
+    # default constructed per call — a shared default instance would leak
+    # mutations between unrelated plans
+    cfg = cfg if cfg is not None else PlannerConfig()
     t0 = time.perf_counter()
     query = pull_up_semantic(query)                       # step 1
     profiles, sample_idx = profile_query(                 # step 2

@@ -27,7 +27,9 @@ _EXPORTS = {
     "as_backend": "repro.runtime.backend",
     "StageStats": "repro.runtime.executor",
     "RuntimeResult": "repro.runtime.executor",
+    "PartitionResult": "repro.runtime.executor",
     "run_plan": "repro.runtime.executor",
+    "iter_plan": "repro.runtime.executor",
     "run_operator": "repro.runtime.executor",
     "merge_stage_stats": "repro.runtime.executor",
     "DEFAULT_COALESCE": "repro.runtime.dispatch",
@@ -36,6 +38,7 @@ _EXPORTS = {
     "ThreadPoolDispatcher": "repro.runtime.dispatch",
     "ShardedDispatcher": "repro.runtime.dispatch",
     "resolve_dispatcher": "repro.runtime.dispatch",
+    "effective_spec": "repro.runtime.dispatch",
     "DISPATCHER_ENV": "repro.runtime.dispatch",
     "gold_membership": "repro.runtime.plan_utils",
     "gold_plan_for": "repro.runtime.plan_utils",

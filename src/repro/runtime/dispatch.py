@@ -163,6 +163,19 @@ class ShardedDispatcher:
         pass
 
 
+def effective_spec(spec=None) -> str:
+    """The dispatcher spec a run with this argument will actually use:
+    spec strings pass through, Dispatcher instances report their name,
+    and None resolves the ``STRETTO_DISPATCHER`` environment default
+    (``inline``). The single source of the env-default policy — EXPLAIN
+    reports through this, so it cannot drift from resolve_dispatcher."""
+    if spec is None:
+        spec = os.environ.get(DISPATCHER_ENV, "") or "inline"
+    if isinstance(spec, str):
+        return spec
+    return getattr(spec, "name", str(spec))
+
+
 def resolve_dispatcher(spec=None) -> Tuple[Any, bool]:
     """Resolve a dispatcher argument to (dispatcher, owned).
 
@@ -173,7 +186,7 @@ def resolve_dispatcher(spec=None) -> Tuple[Any, bool]:
     Owned dispatchers are closed by run_plan when the plan finishes.
     """
     if spec is None:
-        spec = os.environ.get(DISPATCHER_ENV, "") or "inline"
+        spec = effective_spec()
     if hasattr(spec, "submit") or hasattr(spec, "map_shards"):
         return spec, False
     if not isinstance(spec, str):

@@ -28,13 +28,22 @@ every dispatcher produces identical per-tuple decisions.
 Every stage flush is timed and counted into per-stage StageStats — wall
 time, tuple counts, LLM calls, KV-cache bytes touched — the uniform
 telemetry the benchmarks record.
+
+Two consumption modes share one implementation: ``run_plan`` returns the
+final RuntimeResult, and ``iter_plan`` is a generator that additionally
+yields a PartitionResult the moment every tuple of a partition has fully
+cleared the cascade — decisions for a partition are final as soon as its
+tuples have passed (or been skipped by) every stage, which under
+coalescing can happen well before later partitions execute. That is the
+incremental-delivery path the api layer's ``SemFrame.stream()`` exposes.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Deque, Dict, Generator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -92,6 +101,25 @@ class RuntimeResult:
     def stage_times(self) -> List[Tuple[str, float, int]]:
         """Seed-executor-shaped view: (op_name, seconds, n_tuples)."""
         return [(s.op_name, s.wall_s, s.n_tuples) for s in self.stage_stats]
+
+
+@dataclass
+class PartitionResult:
+    """Finalized decisions for one contiguous corpus slice ``[lo, hi)``,
+    emitted by ``iter_plan`` as soon as every tuple in the slice has
+    cleared the whole cascade. Concatenating the slices of all emitted
+    partitions (in order) reproduces the final RuntimeResult's
+    ``accepted`` / ``map_values`` exactly."""
+    index: int                            # partition ordinal, corpus order
+    lo: int                               # global start index (inclusive)
+    hi: int                               # global stop index (exclusive)
+    accepted: np.ndarray                  # (hi-lo,) bool — in the result set
+    map_values: Dict[int, np.ndarray]     # logical idx -> values (hi-lo,);
+    #                                       one entry per SemMap in the query
+    #                                       (uncommitted tuples hold 0)
+
+    def __len__(self) -> int:
+        return self.hi - self.lo
 
 
 @dataclass
@@ -189,6 +217,21 @@ class _CascadeState:
                 result &= self.accepted[li]
         return result
 
+    def partition_result(self, index: int, lo: int, hi: int
+                         ) -> PartitionResult:
+        """Snapshot the (final) decisions for corpus slice [lo, hi)."""
+        accepted = self.alive[lo:hi].copy()
+        for li, op in enumerate(self.sem_ops):
+            if isinstance(op, SemFilter):
+                accepted &= self.accepted[li][lo:hi]
+        map_values = {}
+        for li, op in enumerate(self.sem_ops):
+            if isinstance(op, SemMap):
+                vals = self.map_values.get(li)
+                map_values[li] = vals[lo:hi].copy() if vals is not None \
+                    else np.zeros(hi - lo, object)
+        return PartitionResult(index, lo, hi, accepted, map_values)
+
 
 def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
              backend, *, partition_size: Optional[int] = None,
@@ -215,6 +258,27 @@ def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         padding could flip a tuple sitting within float noise of a
         threshold).
     """
+    return _drain(iter_plan(plan, query, items, backend,
+                            partition_size=partition_size,
+                            coalesce=coalesce, dispatcher=dispatcher))
+
+
+def iter_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
+              backend, *, partition_size: Optional[int] = None,
+              coalesce: Optional[int] = None, dispatcher=None
+              ) -> Generator[PartitionResult, None, RuntimeResult]:
+    """Generator form of ``run_plan``: yields a PartitionResult per
+    partition the moment all of its tuples have cleared the cascade, and
+    returns the final RuntimeResult as the generator's StopIteration
+    value. Execution is identical to ``run_plan`` (same schedule, same
+    decisions) — the yields only observe state, never steer it.
+
+    With a flush dispatcher (inline / threads) delivery is genuinely
+    incremental: early partitions are emitted while later ones are still
+    executing. A sharding dispatcher scatters the partition loop itself,
+    so it emits one PartitionResult per corpus shard, after the scatter
+    completes.
+    """
     backend = as_backend(backend)
     disp, owned = resolve_dispatcher(dispatcher)
     try:
@@ -222,18 +286,39 @@ def run_plan(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         # 1-shard scatter degenerates to one inline streaming pass);
         # flush dispatchers plug into the streaming loop directly
         if hasattr(disp, "map_shards"):
-            return _run_sharded(plan, query, items, backend,
-                                partition_size, coalesce, disp)
-        return _run_streaming(plan, query, items, backend,
-                              partition_size, coalesce, disp)
+            result = yield from _stream_sharded(plan, query, items, backend,
+                                                partition_size, coalesce,
+                                                disp)
+        else:
+            result = yield from _stream_streaming(plan, query, items,
+                                                  backend, partition_size,
+                                                  coalesce, disp)
+        return result
     finally:
         if owned:
             disp.close()
 
 
+def _drain(gen) -> RuntimeResult:
+    """Exhaust an iter_plan generator, returning its RuntimeResult."""
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
 def _run_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
                    backend: Backend, partition_size: Optional[int],
                    coalesce: Optional[int], disp) -> RuntimeResult:
+    return _drain(_stream_streaming(plan, query, items, backend,
+                                    partition_size, coalesce, disp))
+
+
+def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
+                      backend: Backend, partition_size: Optional[int],
+                      coalesce: Optional[int], disp
+                      ) -> Generator[PartitionResult, None, RuntimeResult]:
     sem_ops = query.semantic_ops
     N = len(items)
     S = len(plan.stages)
@@ -245,6 +330,24 @@ def _run_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     state = _CascadeState(N, sem_ops)
     stats = [StageStats(st.op_name, st.logical_idx, st.stage)
              for st in plan.stages]
+    # incremental delivery: a tuple is *settled* once it has passed (or
+    # been skipped by) every stage — no later flush can touch it, so its
+    # decisions are final. Partitions are emitted in corpus order as soon
+    # as every tuple in them is settled.
+    settled = np.zeros(N, bool)
+    bounds: List[Tuple[int, int]] = []    # partition [lo, hi) slices
+    next_emit = 0
+
+    def ready_partitions() -> List[PartitionResult]:
+        nonlocal next_emit
+        out = []
+        while next_emit < len(bounds):
+            lo, hi = bounds[next_emit]
+            if not settled[lo:hi].all():
+                break
+            out.append(state.partition_result(next_emit, lo, hi))
+            next_emit += 1
+        return out
     # pending[s]: global indices that stages < s have fully processed and
     # stage s has not yet looked at (its coalescing buffer). n_pending
     # counts the tuples stage s would actually SCORE — a tuple's
@@ -274,6 +377,7 @@ def _run_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
                 n_pending[s] += n_eligible
                 return
             s += 1
+        settled[idx] = True           # cleared the whole cascade: final
 
     def complete_oldest():
         """Apply the oldest in-flight flush: decisions, stats, downstream
@@ -331,13 +435,17 @@ def _run_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         if idx.size == 0:
             break
         n_parts += 1
+        bounds.append((start, int(idx[-1]) + 1))
         alive = np.ones(idx.size, bool)
         for rel in plan.relational:
             alive &= np.array([rel.apply(getattr(items[i], "row", {}) or {})
                                for i in idx])
         state.admit(idx, alive)
+        settled[idx[~alive]] = True   # relational rejects never enter
         enqueue(0, idx[alive])
         pump()
+        for pr in ready_partitions():
+            yield pr
     # drain: a stage's final flush runs only once nothing upstream —
     # buffered or in flight — can still feed it; otherwise settle the
     # oldest in-flight flush and re-examine
@@ -347,6 +455,10 @@ def _run_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
             submit_flush(s)
         else:
             complete_oldest()
+        for pr in ready_partitions():
+            yield pr
+    for pr in ready_partitions():     # everything is settled post-drain
+        yield pr
 
     executed = [sg for sg in stats if sg.n_batches > 0]
     return RuntimeResult(
@@ -386,9 +498,10 @@ def merge_stage_stats(per_shard: Sequence[Sequence[StageStats]],
     return out
 
 
-def _run_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
-                 backend: Backend, partition_size: Optional[int],
-                 coalesce: Optional[int], disp) -> RuntimeResult:
+def _stream_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
+                    backend: Backend, partition_size: Optional[int],
+                    coalesce: Optional[int], disp
+                    ) -> Generator[PartitionResult, None, RuntimeResult]:
     """Scatter the partition loop across contiguous corpus shards.
 
     Per-tuple decisions are partition-invariant (the existing streaming
@@ -397,11 +510,16 @@ def _run_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     into corpus order and the StageStats summed. A shard is the natural
     unit to place on a jax mesh axis or a separate host process; this
     implementation fans shards out on a thread pool over one shared
-    engine.
+    engine. One PartitionResult is emitted per shard once the scatter
+    completes (shards finish in parallel, so finer-grained emission would
+    not be in corpus order anyway).
     """
     N = len(items)
     bounds = disp.shard_bounds(N)
     inline = InlineDispatcher()
+    sem_ops = query.semantic_ops
+    map_lis = [li for li, op in enumerate(sem_ops)
+               if isinstance(op, SemMap)]
 
     def one_shard(lo: int, hi: int) -> RuntimeResult:
         return _run_streaming(plan, query, items[lo:hi], backend,
@@ -411,12 +529,16 @@ def _run_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
 
     accepted = np.zeros(N, bool)
     map_values: Dict[int, np.ndarray] = {}
-    for (lo, hi), rr in zip(bounds, shards):
+    for pi, ((lo, hi), rr) in enumerate(zip(bounds, shards)):
         accepted[lo:hi] = rr.accepted
         for li, vals in rr.map_values.items():
             if li not in map_values:
                 map_values[li] = np.zeros(N, object)
             map_values[li][lo:hi] = vals
+        yield PartitionResult(
+            pi, lo, hi, rr.accepted.copy(),
+            {li: (rr.map_values[li].copy() if li in rr.map_values
+                  else np.zeros(hi - lo, object)) for li in map_lis})
     stats = merge_stage_stats([rr.stage_stats for rr in shards], plan)
     return RuntimeResult(
         accepted=accepted,

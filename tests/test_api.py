@@ -1,0 +1,287 @@
+"""Declarative API tests: Session/SemFrame must be a zero-cost front door.
+
+Parity: a SemFrame chain compiles to the exact logical Query a hand-built
+pipeline constructs, plans to stage-identical PhysicalPlans (operator
+timing is faked to a deterministic clock so the two profiling runs measure
+identical costs), and executes bit-identically to the internal
+plan_query + run_plan path across dispatchers and partition sizes.
+
+Streaming: `.stream()` chunks concatenate to exactly the `.execute()`
+result, and partitions are delivered incrementally — the first partition
+arrives while later partitions have not yet been scored.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import Session, SessionConfig
+from repro.core import (PlannerConfig, Query, RelFilter, SemFilter, SemMap,
+                        plan_query)
+from repro.core.physical import PhysicalOperator
+from repro.data.synthetic import make_dataset
+from repro.runtime import DEFAULT_COALESCE, OracleBackend, run_plan
+
+FAST = PlannerConfig(steps=120, restarts=2, snapshots=2)
+
+
+class _FakeClock:
+    """Deterministic stand-in for the executor's `time` module: every
+    perf_counter() call advances by a fixed quantum, so measured operator
+    costs are identical across repeated profiling runs. The quantum is a
+    dyadic fraction so accumulation is exact — intervals are bit-equal no
+    matter where on the fake timeline they are measured."""
+
+    def __init__(self, quantum: float = 2.0 ** -13):
+        self._t = 0.0
+        self._quantum = quantum
+        self._lock = threading.Lock()
+
+    def perf_counter(self) -> float:
+        with self._lock:
+            self._t += self._quantum
+            return self._t
+
+
+# ---------------------------------------------------------------------------
+# engine-backed session (shared; profiles built once)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    ds = make_dataset("api", 110, seed=5)
+    session = Session(SessionConfig(
+        cache_dir=str(tmp_path_factory.mktemp("cache")),
+        profile_ratios=(0.0, 0.5, 0.8),
+        sm_ratios=(0.8, 0.0), lg_ratios=(0.5,),
+        planner=FAST, sample_frac=0.35,
+        partition_size=40))
+    session.prepare(ds.items)
+    yield ds, session
+    session.close()
+
+
+def _frame(sess, ds):
+    return (sess.frame(ds.items)
+            .sem_filter("f1", 1)
+            .filter("category", "==", "news")
+            .sem_map("extract v3", 3)
+            .with_guarantees(recall=0.7, precision=0.7))
+
+
+# ---------------------------------------------------------------------------
+# API <-> core parity
+# ---------------------------------------------------------------------------
+
+def test_frame_compiles_to_identical_query(world):
+    ds, sess = world
+    frame = _frame(sess, ds)
+    hand = Query([SemFilter("f1", 1), RelFilter("category", "==", "news"),
+                  SemMap("extract v3", 3)],
+                 target_recall=0.7, target_precision=0.7)
+    assert frame.to_query() == hand
+    # frames are immutable: chaining never mutates the ancestor
+    base = sess.frame(ds.items).sem_filter("f1", 1)
+    strict = base.with_guarantees(recall=0.95)
+    assert base.to_query().target_recall == 0.9          # Query default
+    assert strict.to_query().target_recall == 0.95
+    assert base.nodes == strict.nodes
+
+
+def test_api_core_parity(world, monkeypatch):
+    """SemFrame must plan stage-identically and decide bit-identically to
+    the hand-built plan_query + run_plan path, across dispatchers and
+    partition sizes."""
+    import repro.runtime.executor as executor_mod
+    ds, sess = world
+    # identical measured costs on both profiling runs -> identical plans
+    monkeypatch.setattr(executor_mod, "time", _FakeClock())
+    frame = _frame(sess, ds)
+    hand_q = frame.to_query()
+    hand_plan = plan_query(hand_q, ds.items, sess.backend, FAST,
+                           sample_frac=0.35, seed=0,
+                           coalesce=DEFAULT_COALESCE)
+    api_plan = frame.plan()
+    assert api_plan.stages == hand_plan.stages
+    assert api_plan.relational == hand_plan.relational
+    assert api_plan.feasible == hand_plan.feasible
+
+    for disp in ("inline", "threads:2", "sharded:2"):
+        for psize in (None, 23):
+            ref = run_plan(hand_plan, hand_q, ds.items, sess.backend,
+                           partition_size=psize, dispatcher=disp)
+            res = frame.execute(partition_size=psize, dispatcher=disp)
+            tag = f"{disp} psize={psize}"
+            np.testing.assert_array_equal(res.accepted, ref.accepted,
+                                          err_msg=tag)
+            assert set(res.map_values) == set(ref.map_values), tag
+            for li in ref.map_values:
+                np.testing.assert_array_equal(
+                    res.map_values[li], ref.map_values[li], err_msg=tag)
+            assert res.n_llm_tuples == ref.n_llm_tuples, tag
+
+
+def test_explain_reports_the_plan(world):
+    ds, sess = world
+    frame = _frame(sess, ds)
+    plan = frame.plan()
+    rep = frame.explain()
+    assert len(rep.stages) == len(plan.stages)
+    assert rep.n_items == len(ds.items)
+    assert rep.target_recall == 0.7 and rep.target_precision == 0.7
+    assert len(rep.logical) == 3 and len(rep.relational) == 1
+    assert rep.recall_bound == plan.recall_bound
+    assert rep.feasible == plan.feasible
+    # stage rows mirror the physical plan, in execution order
+    for row, st in zip(rep.stages, plan.stages):
+        assert row.op_name == st.op_name
+        assert row.thr_hi == st.thr_hi and row.thr_lo == st.thr_lo
+        assert row.kind == ("map" if st.is_map else "filter")
+    text = rep.render()
+    assert "EXPLAIN" in text and str(rep) == text
+    for st in plan.stages:
+        assert st.op_name in text
+    assert rep.rows()[0]["order"] == 0
+
+
+def test_execute_uses_session_defaults_and_metrics(world):
+    ds, sess = world
+    frame = _frame(sess, ds)
+    res = frame.execute()
+    assert res.n_partitions == int(np.ceil(len(ds.items) / 40))
+    m = res.metrics()
+    assert set(m) >= {"precision", "recall", "tp", "fp", "fn"}
+    assert res.metrics() is m                     # lazy + cached
+    # vs= compares against an arbitrary result (self -> perfect score)
+    self_m = res.metrics(vs=res)
+    assert self_m["precision"] == pytest.approx(1.0)
+    assert self_m["recall"] == pytest.approx(1.0)
+    # gold is memoized by the session: same RuntimeResult object
+    assert sess.gold(frame.to_query(), ds.items) \
+        is sess.gold(frame.to_query(), ds.items)
+    assert len(res.matches()) == int(res.accepted.sum())
+    assert res.speedup_vs_gold() > 0
+
+
+def test_empty_frame_rejected(world):
+    ds, sess = world
+    with pytest.raises(ValueError):
+        sess.frame(ds.items).execute()
+    with pytest.raises(ValueError):
+        sess.frame(ds.items).with_guarantees(recall=0.5).explain()
+
+
+# ---------------------------------------------------------------------------
+# .stream(): concatenation parity + incremental delivery
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dispatcher", ["inline", "threads:2", "sharded:2"])
+def test_stream_concat_equals_execute(world, dispatcher):
+    ds, sess = world
+    frame = _frame(sess, ds)
+    res = frame.execute(partition_size=25, dispatcher=dispatcher)
+    parts = list(frame.stream(partition_size=25, dispatcher=dispatcher))
+    # partitions tile the corpus in order
+    assert parts[0].lo == 0 and parts[-1].hi == len(ds.items)
+    assert all(a.hi == b.lo for a, b in zip(parts, parts[1:]))
+    assert [p.index for p in parts] == list(range(len(parts)))
+    acc = np.concatenate([p.accepted for p in parts])
+    np.testing.assert_array_equal(acc, res.accepted)
+    for li in res.map_values:
+        got = np.concatenate([p.map_values[li] for p in parts])
+        np.testing.assert_array_equal(got, res.map_values[li])
+    # the stream's final result equals execute() too
+    stream = frame.stream(partition_size=25, dispatcher=dispatcher)
+    final = stream.result                         # drains the stream
+    np.testing.assert_array_equal(final.accepted, res.accepted)
+    assert final.n_partitions == res.n_partitions
+
+
+# ---------------------------------------------------------------------------
+# incremental delivery, observed via a recording backend (no engine)
+# ---------------------------------------------------------------------------
+
+class _CountingFilter(PhysicalOperator):
+    uses_llm = False
+
+    def __init__(self, name, task_id, counter, is_gold=False):
+        self.name = name
+        self.task_id = task_id
+        self.counter = counter
+        self.is_gold = is_gold
+
+    def run_filter(self, items, op):
+        self.counter["scored"] += len(items)
+        idx = np.asarray([it.item_id for it in items], np.float64)
+        return np.asarray(
+            3.0 * np.sin(idx * 12.9898 + self.task_id * 78.233), np.float32)
+
+
+@pytest.fixture()
+def counting_session():
+    counter = {"scored": 0}
+    cheap = _CountingFilter("count-cheap", 1, counter)
+    gold = _CountingFilter("count-gold", 2, counter, is_gold=True)
+    sess = Session(backend=OracleBackend(lambda op: [cheap, gold]),
+                   planner=FAST, sample_frac=0.5)
+    return sess, counter
+
+
+def test_stream_yields_before_final_partition(counting_session):
+    """Incremental delivery: the first partition must arrive while later
+    partitions still have unscored work left."""
+    sess, counter = counting_session
+    ds = make_dataset("stream", 60, seed=2)
+    frame = (sess.frame(ds.items)
+             .sem_filter("count me", task_id=1)
+             .with_guarantees(recall=0.7, precision=0.7))
+    frame.plan()                                  # profiling happens here
+    scored_after_plan = counter["scored"]
+
+    stream = frame.stream(partition_size=10, coalesce=1,
+                          dispatcher="inline")
+    first = next(stream)
+    scored_at_first_yield = counter["scored"]
+    parts = [first] + list(stream)
+    scored_total = counter["scored"]
+
+    assert first.index == 0 and first.lo == 0
+    assert len(parts) == 6
+    # partition 0 was delivered before the later partitions were scored
+    assert scored_after_plan < scored_at_first_yield < scored_total
+    # and the stream result still matches a fresh execute()
+    res = frame.execute(partition_size=10, coalesce=1, dispatcher="inline")
+    np.testing.assert_array_equal(
+        np.concatenate([p.accepted for p in parts]), res.accepted)
+
+
+def test_stream_close_abandons_execution(counting_session):
+    sess, counter = counting_session
+    ds = make_dataset("close", 40, seed=4)
+    frame = (sess.frame(ds.items)
+             .sem_filter("count me", task_id=1)
+             .with_guarantees(recall=0.7, precision=0.7))
+    frame.plan()
+    stream = frame.stream(partition_size=8, coalesce=1, dispatcher="inline")
+    next(stream)
+    scored_at_close = counter["scored"]
+    stream.close()
+    assert counter["scored"] == scored_at_close   # nothing ran after close
+    with pytest.raises(RuntimeError):
+        _ = stream.result
+
+
+# ---------------------------------------------------------------------------
+# top-level package surface
+# ---------------------------------------------------------------------------
+
+def test_repro_reexports():
+    assert repro.Session is Session
+    assert repro.SessionConfig is SessionConfig
+    assert repro.PlannerConfig is PlannerConfig
+    from repro.api import SemFrame
+    assert repro.SemFrame is SemFrame
+    assert "Session" in dir(repro)
+    with pytest.raises(AttributeError):
+        repro.not_a_symbol
