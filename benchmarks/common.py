@@ -122,10 +122,31 @@ def generate_queries(ds: Dataset, n_queries: int, target: float,
     return out
 
 
-def stage_stats_rows(tag: str, result: RuntimeResult) -> List[Dict]:
+def stage_stats_rows(tag: str, result: RuntimeResult,
+                     plan: Optional[PhysicalPlan] = None) -> List[Dict]:
     """Flatten a result's StageStats for the perf-trajectory artifact,
     tagged with the dispatch configuration that executed them (per-stage
-    mean batch size rides along in as_dict)."""
-    return [{"tag": tag, "dispatcher": result.dispatcher,
-             "n_workers": result.n_workers, **s.as_dict()}
-            for s in result.stage_stats]
+    mean batch size rides along in as_dict).
+
+    When the plan that produced the result is supplied, each row also
+    records the planner's expectations next to the measurement —
+    ``planned_batch`` / ``planned_cost_per_tuple_s`` and the
+    ``batch_drift`` ratio (measured mean flush / planned expected flush)
+    — so the trajectory shows the measure -> plan loop converging instead
+    of only what execution did."""
+    planned = {}
+    if plan is not None:
+        planned = {(st.logical_idx, st.stage, st.op_name): st
+                   for st in plan.stages}
+    rows = []
+    for s in result.stage_stats:
+        row = {"tag": tag, "dispatcher": result.dispatcher,
+               "n_workers": result.n_workers, **s.as_dict()}
+        st = planned.get((s.logical_idx, s.stage, s.op_name))
+        if st is not None and st.exp_batch:
+            row["planned_batch"] = round(st.exp_batch, 2)
+            row["planned_cost_per_tuple_s"] = st.cost
+            row["batch_drift"] = round(
+                s.mean_batch / max(st.exp_batch, 1e-9), 3)
+        rows.append(row)
+    return rows

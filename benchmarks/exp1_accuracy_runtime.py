@@ -49,14 +49,22 @@ def run(world: World, targets=(0.5, 0.7, 0.9), n_queries: int = 4,
                         "target_met_recall": m["recall"] / target,
                         "target_met_precision": m["precision"] / target,
                         "runtime_s": res.runtime_s,
+                        "exec_wall_s": res.wall_s,
                         "gold_runtime_s": gold.runtime_s,
+                        "gold_wall_s": gold.wall_s,
                         "plan_time_s": plan.planning_time_s,
+                        # planned-vs-measured cost: does the planner's
+                        # full-corpus estimate track measured reality?
+                        "est_cost_s": plan.est_cost,
+                        "cost_model_error": res.runtime_s
+                        / max(plan.est_cost, 1e-9),
                         "feasible": plan.feasible,
                         "n_llm_tuples": res.n_llm_tuples,
                         "n_partitions": res.n_partitions,
                         "wall_s": time.perf_counter() - t0,
                         "stage_stats": stage_stats_rows(
-                            f"exp1/{ds_name}/t{target}/q{qi}/{method}", res),
+                            f"exp1/{ds_name}/t{target}/q{qi}/{method}",
+                            res, plan),
                     })
     return rows
 

@@ -62,6 +62,7 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
             queries = generate_queries(ds, n_queries, target, seed=71)
             for qi, q in enumerate(queries):
                 rt = {}
+                est = {}
                 sel_counter = collections.Counter()
                 stats = []
                 for tag, backend in (("full", world.backend),
@@ -70,8 +71,9 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
                                       sample_frac=sample_frac)
                     res = world.execute(plan, q, ds.items, backend)
                     rt[tag] = res.runtime_s
+                    est[tag] = plan.est_cost
                     stats += stage_stats_rows(
-                        f"exp2/{ds_name}/t{target}/q{qi}/{tag}", res)
+                        f"exp2/{ds_name}/t{target}/q{qi}/{tag}", res, plan)
                     if tag == "full":
                         for s in plan.stages:
                             sel_counter[s.op_name] += 1
@@ -79,6 +81,8 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
                     "dataset": ds_name, "target": target, "query": qi,
                     "runtime_full_s": rt["full"],
                     "runtime_nocomp_s": rt["nocomp"],
+                    "est_cost_full_s": est["full"],
+                    "est_cost_nocomp_s": est["nocomp"],
                     "speedup": rt["nocomp"] / max(rt["full"], 1e-9),
                     "selected_ops": dict(sel_counter),
                     "stage_stats": stats,

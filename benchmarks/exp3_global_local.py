@@ -42,8 +42,11 @@ def run(world: World, targets=(0.7, 0.9), n_queries: int = 3,
                         "met": (m["recall"] >= target
                                 and m["precision"] >= target),
                         "runtime_s": res.runtime_s,
+                        "exec_wall_s": res.wall_s,
+                        "est_cost_s": plan.est_cost,
                         "stage_stats": stage_stats_rows(
-                            f"exp3/{ds_name}/t{target}/q{qi}/{method}", res),
+                            f"exp3/{ds_name}/t{target}/q{qi}/{method}",
+                            res, plan),
                     })
     return rows
 

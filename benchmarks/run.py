@@ -2,9 +2,16 @@
 
 Default (no args) runs a bounded configuration suitable for CI/CPU
 (~10-20 min): 2 datasets at 30% scale, 3 queries per (dataset, target).
-``--full`` approaches paper scale (5 datasets, more queries).
+``--full`` approaches paper scale (5 datasets, more queries); ``--smoke``
+is the CI perf-trajectory job: one tiny dataset, one query per target,
+kernel/roofline sections skipped, and the run self-validates that the
+written ``stage_stats-<ts>-<sha>.json`` snapshot parses and carries
+non-zero measured mean batches (exit 1 otherwise) — so the trajectory
+artifact can never silently go empty.
 
-Prints a ``name,us_per_call,derived`` CSV plus human-readable summaries.
+Prints a ``name,us_per_call,derived`` CSV plus human-readable summaries,
+including the planned-vs-measured batch drift the measured-feedback loop
+is meant to close.
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ import os
 import subprocess
 import sys
 import time
+
+import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -33,6 +42,9 @@ def _git_sha() -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny self-validating run for the CI trajectory "
+                         "artifact")
     ap.add_argument("--scale", type=float, default=None)
     ap.add_argument("--out", type=str, default="results/bench")
     args = ap.parse_args()
@@ -45,12 +57,19 @@ def main() -> None:
 
     os.makedirs(args.out, exist_ok=True)
     t0 = time.time()
-    scale = args.scale or (1.0 if args.full else 0.25)
-    names = None if args.full else ("movies", "artwork")
-    nq = 6 if args.full else 2
-    targets = (0.5, 0.7, 0.9) if args.full else (0.7, 0.9)
-    cfg = repro.PlannerConfig(steps=300 if args.full else 200,
-                              restarts=4 if args.full else 3)
+    if args.smoke:
+        scale = args.scale or 0.1
+        names = ("movies",)
+        nq = 1
+        targets = (0.7,)
+        cfg = repro.PlannerConfig(steps=120, restarts=2, snapshots=2)
+    else:
+        scale = args.scale or (1.0 if args.full else 0.25)
+        names = None if args.full else ("movies", "artwork")
+        nq = 6 if args.full else 2
+        targets = (0.5, 0.7, 0.9) if args.full else (0.7, 0.9)
+        cfg = repro.PlannerConfig(steps=300 if args.full else 200,
+                                  restarts=4 if args.full else 3)
 
     print(f"# building world (scale={scale}) ...", flush=True)
     world = build_world(scale=scale, dataset_names=names,
@@ -71,7 +90,6 @@ def main() -> None:
     for method in ("stretto", "lotus", "pareto"):
         sub = [r for r in rows1 if r["method"] == method]
         if sub:
-            import numpy as np
             csv_rows.append({
                 "name": f"exp1_runtime_{method}",
                 "us_per_call": float(np.median(
@@ -90,7 +108,6 @@ def main() -> None:
         json.dump({"ladder": lad, "speedup": spd}, f, indent=1)
     for line in E2.summarize(lad, spd):
         print(line)
-    import numpy as np
     csv_rows.append({
         "name": "exp2_speedup_with_compression",
         "us_per_call": 0.0,
@@ -143,25 +160,67 @@ def main() -> None:
                                     f"batches={d['n_batches']} "
                                     f"meanb={mean_b:.1f}"})
 
-    print("# kernel microbenches", flush=True)
-    krows = kernels_bench.run()
-    csv_rows.extend(krows)
+    # planned-vs-measured convergence: how far measured flush batches sat
+    # from the planner's expectations, across every stage that recorded a
+    # planned_batch (the quantity the measured-feedback loop closes)
+    drifts = [r["batch_drift"] for r in stage_stats
+              if r.get("batch_drift")]
+    if drifts:
+        logs = np.abs(np.log2(np.maximum(drifts, 1e-9)))
+        print(f"# batch model: {len(drifts)} stages with planned batch, "
+              f"median |log2 drift|={np.median(logs):.2f} "
+              f"p90={np.percentile(logs, 90):.2f} "
+              f"(0 = planner predicted measured flush widths exactly)")
+        csv_rows.append({
+            "name": "planned_vs_measured_batch",
+            "us_per_call": 0.0,
+            "derived": f"median_abs_log2_drift={np.median(logs):.3f} "
+                       f"n={len(drifts)}"})
 
-    print("# roofline (from dry-run artifacts, if present)", flush=True)
-    recs = roofline.load("results/dryrun_sp")
-    if recs:
-        for line in roofline.table(recs)[:40]:
-            print(line)
-        csv_rows.extend(roofline.csv_rows(recs))
-    else:
-        print("  (run `python -m repro.launch.dryrun --all --out "
-              "results/dryrun_sp` first)")
+    if not args.smoke:
+        print("# kernel microbenches", flush=True)
+        krows = kernels_bench.run()
+        csv_rows.extend(krows)
+
+        print("# roofline (from dry-run artifacts, if present)", flush=True)
+        recs = roofline.load("results/dryrun_sp")
+        if recs:
+            for line in roofline.table(recs)[:40]:
+                print(line)
+            csv_rows.extend(roofline.csv_rows(recs))
+        else:
+            print("  (run `python -m repro.launch.dryrun --all --out "
+                  "results/dryrun_sp` first)")
 
     print("\nname,us_per_call,derived")
     for r in csv_rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     print(f"\n# total benchmark wall time: {time.time() - t0:.0f}s")
     world.close()
+
+    if args.smoke:
+        _smoke_check(snap)
+
+
+def _smoke_check(snapshot_path: str) -> None:
+    """CI gate: the trajectory snapshot must be parseable and carry real
+    measurements — a run that produced an empty or degenerate snapshot
+    must fail loudly, not silently upload a useless artifact."""
+    with open(snapshot_path) as f:
+        snap = json.load(f)
+    stages = snap.get("stages", [])
+    assert stages, f"{snapshot_path}: no stage records"
+    assert all(r.get("n_batches", 0) >= 1 for r in stages), \
+        f"{snapshot_path}: stage record with no flushes"
+    mean_batches = [r.get("mean_batch", 0) for r in stages]
+    assert any(b > 0 for b in mean_batches), \
+        f"{snapshot_path}: all mean_batch zero"
+    assert snap.get("meta", {}).get("git_sha"), \
+        f"{snapshot_path}: missing meta.git_sha"
+    n_planned = sum(1 for r in stages if r.get("planned_batch"))
+    print(f"# smoke check ok: {snapshot_path} ({len(stages)} stage "
+          f"records, {n_planned} with planned-vs-measured batch, "
+          f"max mean_batch={max(mean_batches):.1f})")
 
 
 if __name__ == "__main__":

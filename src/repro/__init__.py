@@ -35,6 +35,7 @@ _EXPORTS = {
     "QueryResult": "repro.api",
     "ResultStream": "repro.api",
     "PartitionResult": "repro.runtime",
+    "MeasuredBatchStore": "repro.core",
     "PlannerConfig": "repro.core",
     "Query": "repro.core",
     "SemFilter": "repro.core",

@@ -1,4 +1,4 @@
-"""EXPLAIN for semantic queries: structured plan report + table renderer.
+"""EXPLAIN / EXPLAIN ANALYZE: structured plan report + table renderer.
 
 `SemFrame.explain()` returns an ExplainReport — the logical plan, the
 physical cascade in execution order (thresholds, expected coalesced batch,
@@ -6,10 +6,17 @@ batch-aware per-tuple cost), the planner's Bayesian quality bounds and
 feasibility verdict, and the execution configuration the session would
 run it with. `str(report)` renders the table; `.rows()` gives the stage
 table as dicts for programmatic use.
+
+`QueryResult.explain_analyze()` re-renders the same report with the
+*measured* execution telemetry (`with_measured`) in columns next to the
+planned numbers: per-stage measured per-tuple cost, mean flush batch,
+tuples scored and KV bytes, plus the run's `runtime_s` (summed operator
+time) and `wall_s` (elapsed wall clock) — the planned-vs-measured
+comparison that makes cost-model drift visible instead of latent.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.logical import Query, RelFilter, SemFilter, SemMap
@@ -18,7 +25,10 @@ from repro.core.physical import PhysicalPlan
 
 @dataclass(frozen=True)
 class ExplainStage:
-    """One physical cascade stage, in execution order."""
+    """One physical cascade stage, in execution order. The ``meas_*``
+    fields are None for a plain EXPLAIN and filled by EXPLAIN ANALYZE
+    (``ExplainReport.with_measured``); a stage the executed cascade never
+    flushed keeps them None."""
     order: int                 # position in the execution schedule
     logical_idx: int           # which logical operator it implements
     stage: int                 # position within that operator's cascade
@@ -29,14 +39,26 @@ class ExplainStage:
     thr_hi: float              # accept above / commit above (maps)
     cost_per_tuple_s: float    # batch-aware effective per-tuple cost
     exp_batch: float           # expected coalesced flush size (0: n/a)
+    meas_cost_per_tuple_s: Optional[float] = None   # measured wall/tuple
+    meas_batch: Optional[float] = None     # measured mean flush size
+    meas_tuples: Optional[int] = None      # tuples actually scored
+    meas_kv_bytes: Optional[int] = None    # exact KV bytes materialized
+    meas_batches: Optional[int] = None     # flushes executed
 
     def as_dict(self) -> Dict[str, Any]:
-        return {"order": self.order, "logical_idx": self.logical_idx,
-                "stage": self.stage, "op_name": self.op_name,
-                "kind": self.kind, "is_gold": self.is_gold,
-                "thr_lo": self.thr_lo, "thr_hi": self.thr_hi,
-                "cost_per_tuple_s": self.cost_per_tuple_s,
-                "exp_batch": self.exp_batch}
+        out = {"order": self.order, "logical_idx": self.logical_idx,
+               "stage": self.stage, "op_name": self.op_name,
+               "kind": self.kind, "is_gold": self.is_gold,
+               "thr_lo": self.thr_lo, "thr_hi": self.thr_hi,
+               "cost_per_tuple_s": self.cost_per_tuple_s,
+               "exp_batch": self.exp_batch}
+        if self.meas_tuples is not None:
+            out.update({"meas_cost_per_tuple_s": self.meas_cost_per_tuple_s,
+                        "meas_batch": self.meas_batch,
+                        "meas_tuples": self.meas_tuples,
+                        "meas_kv_bytes": self.meas_kv_bytes,
+                        "meas_batches": self.meas_batches})
+        return out
 
 
 def _describe_node(node) -> str:
@@ -68,6 +90,17 @@ class ExplainReport:
     dispatcher: str                     # session execution defaults
     partition_size: Optional[int]
     coalesce: Optional[int]
+    # measured execution summary — None until with_measured() (ANALYZE)
+    measured_runtime_s: Optional[float] = None    # summed operator time
+    measured_wall_s: Optional[float] = None       # elapsed wall clock
+    measured_partitions: Optional[int] = None
+    measured_dispatcher: Optional[str] = None     # what actually ran it
+    measured_workers: Optional[int] = None
+
+    @property
+    def analyzed(self) -> bool:
+        """True once measured execution telemetry has been attached."""
+        return self.measured_runtime_s is not None
 
     @classmethod
     def from_plan(cls, session, query: Query, items: Sequence[Any],
@@ -99,6 +132,47 @@ class ExplainReport:
             coalesce=cfg.coalesce if cfg.coalesce is not None
             else DEFAULT_COALESCE)
 
+    def with_measured(self, result) -> "ExplainReport":
+        """EXPLAIN ANALYZE: a new report with the measured per-stage
+        telemetry of `result` (a RuntimeResult) filled in next to the
+        planned columns. Stages are matched by (logical_idx, stage,
+        op_name) — the StageStats identity key — so a stage the cascade
+        never flushed keeps its measured fields None and renders as
+        ``--``."""
+        by_key = {(sg.logical_idx, sg.stage, sg.op_name): sg
+                  for sg in result.stage_stats}
+        stages = []
+        for s in self.stages:
+            sg = by_key.get((s.logical_idx, s.stage, s.op_name))
+            if sg is None or not sg.n_batches:
+                stages.append(s)
+                continue
+            stages.append(replace(
+                s,
+                meas_cost_per_tuple_s=sg.wall_s / max(sg.n_tuples, 1),
+                meas_batch=sg.mean_batch,
+                meas_tuples=sg.n_tuples,
+                meas_kv_bytes=sg.kv_bytes,
+                meas_batches=sg.n_batches))
+        # the execution line must describe the run that produced these
+        # measurements, not the session defaults — per-call overrides
+        # (dispatcher / partition_size / coalesce) are carried on the
+        # RuntimeResult (coalesce is always recorded by the runtime, so
+        # its presence marks a result with recorded execution config)
+        exec_cfg = {}
+        if result.coalesce is not None:
+            exec_cfg = {"dispatcher": f"{result.dispatcher}",
+                        "partition_size": result.partition_size,
+                        "coalesce": result.coalesce}
+        return replace(
+            self, stages=tuple(stages),
+            measured_runtime_s=result.runtime_s,
+            measured_wall_s=result.wall_s,
+            measured_partitions=result.n_partitions,
+            measured_dispatcher=result.dispatcher,
+            measured_workers=result.n_workers,
+            **exec_cfg)
+
     def rows(self) -> List[Dict[str, Any]]:
         """The stage table as dicts (execution order)."""
         return [s.as_dict() for s in self.stages]
@@ -106,7 +180,8 @@ class ExplainReport:
     # ---------------- rendering ----------------
 
     def render(self) -> str:
-        head = (f"EXPLAIN — {len(self.logical)} operators over "
+        verb = "EXPLAIN ANALYZE" if self.analyzed else "EXPLAIN"
+        head = (f"{verb} — {len(self.logical)} operators over "
                 f"{self.n_items} items, guarantees R>={self.target_recall} "
                 f"P>={self.target_precision}")
         out = [head, "logical plan (declared order):"]
@@ -122,10 +197,14 @@ class ExplainReport:
             f"planned in {self.planning_time_s:.2f}s):")
         cols = [("#", 2), ("op", 24), ("L/s", 5), ("kind", 6),
                 ("thr_lo", 7), ("thr_hi", 7), ("cost/t", 9), ("batch", 6)]
+        if self.analyzed:
+            # measured columns, planned-vs-measured side by side
+            cols += [("meas/t", 9), ("mbatch", 6), ("tuples", 7),
+                     ("kvMB", 7)]
         out.append("  " + " ".join(f"{name:>{w}}" for name, w in cols))
         for s in self.stages:
             gold = " [gold]" if s.is_gold else ""
-            out.append("  " + " ".join([
+            row = [
                 f"{s.order:>2}",
                 f"{s.op_name + gold:>24}",
                 f"{f'{s.logical_idx}/{s.stage}':>5}",
@@ -134,7 +213,18 @@ class ExplainReport:
                 "     --" if s.is_gold else f"{s.thr_hi:>+7.2f}",
                 f"{s.cost_per_tuple_s * 1e3:>7.2f}ms",
                 f"{s.exp_batch:>6.0f}" if s.exp_batch else "    --",
-            ]))
+            ]
+            if self.analyzed:
+                if s.meas_tuples is None:
+                    row += ["       --", "    --", "     --", "     --"]
+                else:
+                    row += [
+                        f"{s.meas_cost_per_tuple_s * 1e3:>7.2f}ms",
+                        f"{s.meas_batch:>6.1f}",
+                        f"{s.meas_tuples:>7d}",
+                        f"{s.meas_kv_bytes / 1e6:>7.1f}",
+                    ]
+            out.append("  " + " ".join(row))
         psize = self.partition_size if self.partition_size is not None \
             else "whole-corpus"
         out.append(
@@ -142,6 +232,13 @@ class ExplainReport:
             f"dispatcher={self.dispatcher} "
             f"partition_size={psize} "
             f"coalesce={self.coalesce}")
+        if self.analyzed:
+            out.append(
+                f"measured: runtime_s={self.measured_runtime_s:.2f} "
+                f"(operator-time sum) wall_s={self.measured_wall_s:.2f} "
+                f"(elapsed) partitions={self.measured_partitions} "
+                f"dispatcher={self.measured_dispatcher}"
+                f":{self.measured_workers}")
         return "\n".join(out)
 
     def __str__(self) -> str:

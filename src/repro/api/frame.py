@@ -117,13 +117,17 @@ class SemFrame:
             self._session, self.to_query(), self._items, self.plan())
 
     def execute(self, *, partition_size=_UNSET, coalesce=_UNSET,
-                dispatcher=_UNSET):
-        """Plan + execute over the full corpus; returns a QueryResult."""
+                dispatcher=_UNSET, replan_on_drift=None):
+        """Plan + execute over the full corpus; returns a QueryResult.
+        `replan_on_drift` forwards to Session.run: re-plan + re-execute
+        once if measured flush batches diverge from planned by more than
+        the given factor."""
         from repro.api.result import QueryResult
         query = self.to_query()
         raw = self._session.run(self.plan(), query, self._items,
                                 partition_size=partition_size,
-                                coalesce=coalesce, dispatcher=dispatcher)
+                                coalesce=coalesce, dispatcher=dispatcher,
+                                replan_on_drift=replan_on_drift)
         return QueryResult(self._session, query, self._items, raw)
 
     def stream(self, *, partition_size=_UNSET, coalesce=_UNSET,

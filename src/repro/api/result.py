@@ -4,16 +4,22 @@ QueryResult delegates the raw execution fields (`accepted`, `map_values`,
 `stage_stats`, ...) and adds the query-level conveniences the examples
 and benchmarks kept re-implementing: lazy gold comparison
 (`.metrics()` — the gold execution runs at most once per (corpus, query),
-memoized by the Session), accepted-item access, and speedup reporting.
+memoized by the Session), accepted-item access, speedup reporting, and
+`.explain_analyze()` — the planned ExplainReport re-rendered with this
+execution's measured per-stage telemetry next to the planner's numbers.
 
 ResultStream is the `.stream()` terminal verb's iterator: it yields
 PartitionResult objects as partitions settle, and exposes the
 whole-corpus QueryResult as `.result` once the stream finishes (accessing
-it early drains the remaining partitions).
+it early drains the remaining partitions). Because every PartitionResult
+carries its per-partition StageStats delta, the stream maintains live
+merged telemetry (`.stage_stats`, `.tuples_settled`, `.progress`) over
+the partitions consumed so far — truthful progress reporting at zero
+extra execution cost.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, List, Optional, Sequence
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -46,7 +52,16 @@ class QueryResult:
 
     @property
     def runtime_s(self) -> float:
+        """Summed measured operator time across all flushes (total work;
+        dispatcher-invariant up to timing noise)."""
         return self.raw.runtime_s
+
+    @property
+    def wall_s(self) -> float:
+        """Elapsed wall clock of the execution — what the caller waited.
+        Under a parallel dispatcher wall_s < runtime_s; the ratio is the
+        realized overlap speedup."""
+        return self.raw.wall_s
 
     @property
     def stage_stats(self) -> List[StageStats]:
@@ -92,9 +107,32 @@ class QueryResult:
         ref = vs.raw if isinstance(vs, QueryResult) else vs
         return evaluate_vs_gold(self.raw, ref, self.query.semantic_ops)
 
+    def explain_analyze(self):
+        """EXPLAIN ANALYZE: the planned ExplainReport for this (query,
+        corpus) with this execution's measured telemetry filled in —
+        per-stage measured cost/batch/KV next to the planned columns,
+        plus runtime_s vs wall_s for the whole run. The planned columns
+        come from the plan that *produced this result* (carried on the
+        RuntimeResult), never a re-derived one — measured-feedback
+        recording after the run can change what session.plan() would
+        return today, and pairing those stages with this run's stats
+        would be exactly the kind of telemetry lie this report exists
+        to rule out."""
+        from repro.api.explain import ExplainReport
+        plan = self.raw.plan
+        if plan is None:     # result constructed outside the runtime
+            plan = self.session.plan(self.query, self.items)
+        report = ExplainReport.from_plan(self.session, self.query,
+                                         self.items, plan)
+        return report.with_measured(self.raw)
+
     def speedup_vs_gold(self) -> float:
-        """Measured-runtime speedup over the gold reference execution."""
+        """Measured speedup over the gold reference execution, on elapsed
+        wall clock when both sides measured it (so parallel dispatch
+        shows its real speedup), else on summed operator time."""
         gold = self.session.gold(self.query, self.items)
+        if self.raw.wall_s > 0 and gold.wall_s > 0:
+            return gold.wall_s / max(self.raw.wall_s, 1e-9)
         return gold.runtime_s / max(self.raw.runtime_s, 1e-9)
 
     def __len__(self) -> int:
@@ -109,7 +147,18 @@ class QueryResult:
 
 class ResultStream(Iterator[PartitionResult]):
     """Iterator over per-partition results; `.result` is the final
-    whole-corpus QueryResult (draining any unconsumed partitions)."""
+    whole-corpus QueryResult (draining any unconsumed partitions).
+
+    Live telemetry over the partitions consumed so far — every
+    PartitionResult carries the per-stage StageStats delta accounted
+    since the previous emission, and the stream folds them together:
+
+      .stage_stats     — merged per-stage stats (plan order of first
+                         appearance); equals the final result's stats
+                         once the stream is exhausted
+      .tuples_settled  — corpus tuples whose decisions are final
+      .progress        — settled fraction of the corpus, 0.0 .. 1.0
+    """
 
     def __init__(self, session, query: Query, items: Sequence[Any], gen):
         self.session = session
@@ -118,6 +167,8 @@ class ResultStream(Iterator[PartitionResult]):
         self._gen = gen
         self._final: Optional[QueryResult] = None
         self._closed = False
+        self._live: Dict[Tuple[int, int, str], StageStats] = {}
+        self._settled = 0
 
     def __iter__(self) -> "ResultStream":
         return self
@@ -126,11 +177,34 @@ class ResultStream(Iterator[PartitionResult]):
         if self._final is not None or self._closed:
             raise StopIteration
         try:
-            return next(self._gen)
+            part = next(self._gen)
         except StopIteration as stop:
             self._final = QueryResult(self.session, self.query, self.items,
                                       stop.value)
             raise StopIteration from None
+        self._settled += len(part)
+        for sg in part.stage_stats:
+            key = (sg.logical_idx, sg.stage, sg.op_name)
+            m = self._live.get(key)
+            if m is None:
+                self._live[key] = sg.copy()
+            else:
+                m.merge(sg)
+        return part
+
+    @property
+    def stage_stats(self) -> List[StageStats]:
+        """Merged per-stage stats over the partitions consumed so far."""
+        return list(self._live.values())
+
+    @property
+    def tuples_settled(self) -> int:
+        return self._settled
+
+    @property
+    def progress(self) -> float:
+        """Fraction of the corpus whose decisions are final."""
+        return self._settled / max(len(self.items), 1)
 
     @property
     def result(self) -> QueryResult:

@@ -17,13 +17,15 @@ from __future__ import annotations
 
 import shutil
 import tempfile
+import weakref
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.logical import Query
 from repro.core.optimizer import PlannerConfig
 from repro.core.planner import plan_query
 from repro.core.physical import PhysicalPlan
+from repro.core.profiling import MeasuredBatchStore, batch_drift
 from repro.runtime.backend import Backend, as_backend
 from repro.runtime.dispatch import DEFAULT_COALESCE
 from repro.runtime.executor import RuntimeResult, iter_plan, run_plan
@@ -63,6 +65,16 @@ class SessionConfig:
       dispatcher       — runtime dispatcher spec ("inline" |
                          "threads[:N]" | "sharded[:N]"), a Dispatcher
                          instance, or None to read STRETTO_DISPATCHER
+
+    Measured feedback (the measure -> plan loop)
+      feedback         — seeds the session's MeasuredBatchStore: a store
+                         instance, a directory of stage_stats*.json
+                         trajectory snapshots to aggregate, or None for a
+                         fresh empty store. Once the store holds measured
+                         telemetry (loaded, via Session.record_measured,
+                         or by a replan-on-drift), Session.plan() prices
+                         operators at measured flush widths instead of
+                         the static coalesce default.
     """
     cache_dir: Optional[str] = None
     models: Tuple[str, ...] = ("sm", "lg")
@@ -84,6 +96,8 @@ class SessionConfig:
     partition_size: Optional[int] = None
     coalesce: Optional[int] = None
     dispatcher: Optional[Any] = None
+
+    feedback: Optional[Any] = None
 
     def ladder(self) -> Tuple[float, ...]:
         """The compression ratios profiles are built at (gold 0.0 always
@@ -123,6 +137,28 @@ class Session:
         self._prepared: set = set()
         self._gold_cache: Dict[Any, RuntimeResult] = {}
         self._plan_cache: Dict[Any, PhysicalPlan] = {}
+        # stable per-object corpus tokens for items without an item_id:
+        # CPython reuses id() after GC, so raw ids must never key a memo
+        # (two distinct corpora could silently share plan/gold entries).
+        # Weak-referenceable objects get a counter token that dies with
+        # them; the rest are pinned for the session's lifetime so their
+        # ids cannot be recycled (growth bounded by the distinct keyless
+        # corpora the session sees — over-invalidation is safe, collision
+        # is not).
+        self._obj_tokens: "weakref.WeakKeyDictionary[Any, int]" = \
+            weakref.WeakKeyDictionary()
+        self._pinned_tokens: Dict[int, int] = {}
+        self._id_pins: List[Any] = []
+        self._next_token = 0
+        # measured execution feedback driving the measure -> plan loop
+        fb = config.feedback
+        if isinstance(fb, MeasuredBatchStore):
+            self.measured = fb
+        elif isinstance(fb, str):
+            self.measured = MeasuredBatchStore.from_dir(fb)
+        else:
+            self.measured = MeasuredBatchStore()
+        self.n_replans = 0
 
         self._owns_engine = engine is None and backend is None
         if backend is not None and engine is None:
@@ -179,13 +215,36 @@ class Session:
 
     # ---------------- offline phase ----------------
 
-    @staticmethod
-    def _corpus_key(items: Sequence[Any]) -> Tuple:
+    def _object_token(self, it: Any) -> int:
+        """A session-stable token for an item without an item_id. Unlike
+        raw id(), tokens are never recycled: weak-referenceable items get
+        a fresh counter entry that disappears with the object (a new
+        object can never inherit it), everything else is pinned so its id
+        stays unique for the session's lifetime."""
+        try:
+            tok = self._obj_tokens.get(it)
+            if tok is None:
+                tok = self._next_token
+                self._next_token += 1
+                self._obj_tokens[it] = tok
+            return tok
+        except TypeError:       # unhashable / no weakref support: pin it
+            key = id(it)
+            tok = self._pinned_tokens.get(key)
+            if tok is None:
+                self._id_pins.append(it)
+                tok = self._next_token
+                self._next_token += 1
+                self._pinned_tokens[key] = tok
+            return tok
+
+    def _corpus_key(self, items: Sequence[Any]) -> Tuple:
         """Cheap corpus fingerprint for profile/plan/gold memoization:
         length plus (item_id, lead token) at a spread of sample
-        positions. Items without an `item_id` fall back to object
-        identity — distinct same-length corpora must never share a key
-        (over-invalidation is safe, collision is not)."""
+        positions. Items without an `item_id` use a session-held stable
+        token (see _object_token) — never a raw id(), which CPython
+        recycles after GC; distinct same-length corpora must never share
+        a key (over-invalidation is safe, collision is not)."""
         n = len(items)
         step = max(n // 16, 1)
         probe = []
@@ -193,7 +252,8 @@ class Session:
             toks = getattr(it, "tokens", None)
             lead = toks[0] if toks is not None and len(toks) else None
             item_id = getattr(it, "item_id", None)
-            probe.append((item_id if item_id is not None else id(it), lead))
+            probe.append((item_id if item_id is not None
+                          else ("obj", self._object_token(it)), lead))
         return (n, tuple(probe))
 
     def prepare(self, items: Sequence[Any],
@@ -265,10 +325,16 @@ class Session:
 
     def plan(self, query: Query, items: Sequence[Any]) -> PhysicalPlan:
         """Plan `query` over `items` with the session's planner settings
-        (memoized per (corpus, query) — explain + execute share a plan)."""
+        (memoized per (corpus, query, measured-feedback version) —
+        explain + execute share a plan; recording new measured telemetry
+        bumps the store version, so the next plan() re-plans against the
+        updated flush widths). When the session's MeasuredBatchStore
+        holds telemetry, BatchHint is seeded from measured flush widths
+        instead of the static coalesce default."""
         self._ensure_prepared(items)
         key = (self._corpus_key(items), tuple(query.nodes),
-               query.target_recall, query.target_precision)
+               query.target_recall, query.target_precision,
+               self.measured.version if len(self.measured) else 0)
         plan = self._plan_cache.get(key)
         if plan is None:
             cfg = self.config
@@ -277,19 +343,57 @@ class Session:
                 sample_frac=cfg.sample_frac, seed=cfg.seed,
                 reorder=cfg.reorder,
                 coalesce=cfg.coalesce if cfg.coalesce is not None
-                else DEFAULT_COALESCE)
+                else DEFAULT_COALESCE,
+                measured=self.measured if len(self.measured) else None)
             self._plan_cache[key] = plan
         return plan
 
+    def record_measured(self, result: RuntimeResult) -> None:
+        """Feed a result's measured StageStats into the session's
+        MeasuredBatchStore, so subsequent plan() calls price operators at
+        the flush widths execution actually delivered."""
+        self.measured.record_result(result)
+
     def run(self, plan: PhysicalPlan, query: Query, items: Sequence[Any],
             backend: Optional[Backend] = None, *, partition_size=_UNSET,
-            coalesce=_UNSET, dispatcher=_UNSET) -> RuntimeResult:
+            coalesce=_UNSET, dispatcher=_UNSET,
+            replan_on_drift: Optional[float] = None) -> RuntimeResult:
         """Execute a prebuilt plan through the streaming runtime with the
-        session's execution defaults."""
+        session's execution defaults.
+
+        replan_on_drift — when set (a factor > 1), compare each executed
+        stage's measured mean flush batch against the plan's expected
+        batch after the run; if any stage diverges by more than the
+        factor (either direction), record the measured telemetry into the
+        session's MeasuredBatchStore, re-plan the query against the
+        measured widths, and re-execute once with the corrected plan
+        (returning the second result). The paper's cost model is only as
+        good as its batch expectations — this is the cheap online
+        correction for when reality disagrees. Only valid when the run
+        executes the session's own backend: re-planning profiles against
+        `self.backend`, so a caller-supplied backend would be re-planned
+        on the wrong operator ladder and its stats would pollute the
+        session's measured store.
+        """
         self._ensure_prepared(items)
-        return run_plan(plan, query, items, backend or self.backend,
-                        **self._exec_kwargs(partition_size, coalesce,
-                                            dispatcher))
+        if replan_on_drift is not None and backend is not None \
+                and backend is not self.backend:
+            raise ValueError(
+                "replan_on_drift requires the session backend: re-planning "
+                "profiles against session.backend, which is not the "
+                "backend this run would execute on")
+        kwargs = self._exec_kwargs(partition_size, coalesce, dispatcher)
+        result = run_plan(plan, query, items, backend or self.backend,
+                          **kwargs)
+        if replan_on_drift is not None:
+            drift = batch_drift(plan, result.stage_stats)
+            if drift > float(replan_on_drift):
+                self.record_measured(result)
+                self.n_replans += 1
+                new_plan = self.plan(query, items)
+                result = run_plan(new_plan, query, items,
+                                  backend or self.backend, **kwargs)
+        return result
 
     def iter_run(self, plan: PhysicalPlan, query: Query,
                  items: Sequence[Any], backend: Optional[Backend] = None, *,

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -35,8 +36,20 @@ class CacheStore:
         os.makedirs(root, exist_ok=True)
         self._mem: Dict[Tuple[str, int], Dict[str, np.ndarray]] = {}
         # monotonic telemetry: bytes of cached KV arrays handed to decode
-        # batches — the runtime's StageStats reads deltas of this counter
+        # batches. The global counter is the store-wide total; the
+        # thread-local twin counts only bytes loaded by the calling thread,
+        # which is what the runtime's StageStats reads deltas of — each
+        # stage flush runs entirely on one dispatcher thread, so
+        # thread-local deltas stay exact when flushes overlap (the global
+        # counter's deltas would double-count concurrent loads)
         self.bytes_loaded = 0
+        self._tl = threading.local()
+        self._bytes_lock = threading.Lock()
+
+    @property
+    def bytes_loaded_local(self) -> int:
+        """KV bytes materialized by the *calling thread* (monotonic)."""
+        return getattr(self._tl, "bytes_loaded", 0)
 
     def _path(self, profile: Profile, item_id: int) -> str:
         d = os.path.join(self.root, profile.tag)
@@ -85,17 +98,29 @@ class CacheStore:
 
     def load_batch(self, cfg: ModelConfig, profile: Profile,
                    item_ids: Sequence[int], pad_to_multiple: int = 32,
-                   headroom: int = 0) -> Tuple[Dict[str, Any], np.ndarray]:
+                   headroom: int = 0, n_real: Optional[int] = None
+                   ) -> Tuple[Dict[str, Any], np.ndarray]:
         """Assemble a right-padded decode cache for a batch of items.
 
         Returns (cache pytree with leaves (L, B, S_max, ...) + 'lengths',
         lengths array). Padding to the max compressed length in the batch
         is the paper's execution-time batching scheme. `headroom` reserves
         slots for the operator query + generated tokens.
+
+        `n_real` bounds the bytes-loaded telemetry to the first n_real
+        entries: callers that replicate an item to round the batch up to
+        a shape bucket (see ServingEngine) pass the un-padded count, so
+        the counter measures the cache bytes the *scored tuples* needed —
+        an exact quantity independent of how flushes were grouped — not
+        the padding replicas.
         """
         shards = [self.load(profile, i) for i in item_ids]
-        self.bytes_loaded += sum(a.nbytes for s in shards
-                                 for k, a in s.items() if k != "__length__")
+        n_count = len(shards) if n_real is None else min(n_real, len(shards))
+        loaded = sum(a.nbytes for s in shards[:n_count]
+                     for k, a in s.items() if k != "__length__")
+        with self._bytes_lock:
+            self.bytes_loaded += loaded
+        self._tl.bytes_loaded = self.bytes_loaded_local + loaded
         lengths = np.array([int(s["__length__"]) for s in shards], np.int32)
         smax = int(lengths.max()) + headroom
         smax = ((smax + pad_to_multiple - 1) // pad_to_multiple

@@ -9,7 +9,8 @@ from repro.core.optimizer import OptimizedPlan, PlannerConfig, optimize_query
 from repro.core.physical import (CostCurve, PhysicalOperator, PhysicalPlan,
                                  PhysicalPlanStage, ProfiledPipeline)
 from repro.core.planner import plan_query
-from repro.core.profiling import fit_cost_curve, profile_query
+from repro.core.profiling import (MeasuredBatchStore, batch_drift,
+                                  fit_cost_curve, profile_query)
 from repro.core.relaxation import (BatchHint, PipelineData, PipelineParams,
                                    QueryCounts, query_counts,
                                    simulate_pipeline)

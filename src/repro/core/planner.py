@@ -26,7 +26,15 @@ def plan_query(query: Query, items: Sequence[Any], registry: Callable,
                cfg: Optional[PlannerConfig] = None,
                sample_frac: float = 0.15, seed: int = 0,
                reorder: bool = True,
-               coalesce: int = DEFAULT_COALESCE) -> PhysicalPlan:
+               coalesce: int = DEFAULT_COALESCE,
+               measured=None) -> PhysicalPlan:
+    """Plan `query` over `items`. `measured` (an optional
+    core.profiling.MeasuredBatchStore) activates the measured-batch
+    feedback loop: operators with recorded execution telemetry are priced
+    at their *measured* mean flush width instead of the static `coalesce`
+    default, both inside the gradient optimizer's differentiable cost
+    (per-op, via PipelineData.meas_width) and in the DP reorderer's
+    per-stage `exp_batch`."""
     # default constructed per call — a shared default instance would leak
     # mutations between unrelated plans
     cfg = cfg if cfg is not None else PlannerConfig()
@@ -35,10 +43,20 @@ def plan_query(query: Query, items: Sequence[Any], registry: Callable,
     profiles, sample_idx = profile_query(                 # step 2
         query, items, registry, sample_frac, seed)
     g = gold_membership(profiles)
-    pipelines = pipelines_data(profiles)
+    pipelines = pipelines_data(profiles, measured)
     # batch-size-aware costing: amortize fixed per-call cost over the
-    # coalesced flush batches the streaming executor will actually run
-    hint = R.BatchHint(width=float(max(coalesce, 1)),
+    # coalesced flush batches the streaming executor will actually run.
+    # The hint width is the static coalesce default unless the measured
+    # store has seen these ops execute, in which case their tuple-weighted
+    # measured flush width seeds the hint (per-op measured widths override
+    # it again inside the relaxation where individual ops were recorded).
+    width = float(max(coalesce, 1))
+    if measured is not None and len(measured):
+        all_ops = [name for p in profiles for name in p.op_names]
+        blended = measured.blended_width(all_ops)
+        if blended is not None:
+            width = max(blended, 1.0)
+    hint = R.BatchHint(width=width,
                        scale=len(items) / max(len(sample_idx), 1))
     plan = optimize_query(pipelines, g,                   # step 3
                           query.target_recall, query.target_precision, cfg,
@@ -57,7 +75,12 @@ def plan_query(query: Query, items: Sequence[Any], registry: Callable,
             inter, intra, reach = sel[li][i]
             cap = float(p.batch_caps[i]) if p.batch_caps is not None \
                 else np.inf
-            exp_batch = max(1.0, min(hint.width, cap, reach * len(items)))
+            w_i = hint.width
+            if measured is not None:
+                meas = measured.mean_batch(p.op_names[i])
+                if meas is not None:
+                    w_i = max(meas, 1.0)
+            exp_batch = max(1.0, min(w_i, cap, reach * len(items)))
             curve = p.cost_curves[i] if p.cost_curves is not None else None
             cost = curve.per_tuple_at(exp_batch) if curve is not None \
                 else float(p.costs[i])

@@ -49,6 +49,10 @@ class PipelineData(NamedTuple):
     #                                       None: scalar cost model
     batch_cap: Optional[jax.Array] = None  # (n,) memory-budgeted max batch
     #                                        per op (inf: unbounded)
+    meas_width: Optional[jax.Array] = None  # (n,) measured flush width per
+    #                                         op from past executions
+    #                                         (nan: unmeasured — fall back
+    #                                         to BatchHint.width)
 
 
 class BatchHint(NamedTuple):
@@ -99,15 +103,18 @@ def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,
     reject fires) — used by maps to weight value correctness.
 
     When `data.fixed` is set, per-op cost is batch-size-aware: the
-    expected flush batch at op i is min(reach_i * scale, width, cap_i)
+    expected flush batch at op i is min(reach_i * scale, width_i, cap_i)
     where reach_i is the expected number of sample tuples the op scores,
     and cost becomes per_tuple + fixed / batch — differentiable, so the
     optimizer feels that a rarely-reached (or memory-capped) op pays its
-    per-call overhead on tiny batches. `reach_weight` (N,) is each
-    tuple's probability of reaching this pipeline at all (upstream
-    filters' survival, supplied by query_counts); the executor never
-    scores upstream-rejected tuples, so they must not inflate the
-    expected batch.
+    per-call overhead on tiny batches. width_i is the op's *measured*
+    flush width from past executions (`data.meas_width`) where one is
+    recorded, else the hint's static coalesce width — the measured-batch
+    feedback loop pricing ops at the batches they really saw.
+    `reach_weight` (N,) is each tuple's probability of reaching this
+    pipeline at all (upstream filters' survival, supplied by
+    query_counts); the executor never scores upstream-rejected tuples,
+    so they must not inflate the expected batch.
     """
     n, N = data.scores.shape
     hint = batch_hint if batch_hint is not None else BatchHint()
@@ -115,7 +122,11 @@ def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,
         else jnp.zeros_like(data.costs)
     cap = data.batch_cap if data.batch_cap is not None \
         else jnp.full_like(data.costs, jnp.inf)
-    width = jnp.minimum(cap, hint.width)    # (n,) max feasible flush size
+    base_w = jnp.full_like(data.costs, hint.width) \
+        if data.meas_width is None \
+        else jnp.where(jnp.isnan(data.meas_width), hint.width,
+                       data.meas_width)
+    width = jnp.minimum(cap, base_w)        # (n,) max feasible flush size
     weight = jnp.ones(N) if reach_weight is None else reach_weight
     if hard:
         sigma = (jax.nn.sigmoid(params.pick_logits) > 0.5).astype(jnp.float32)

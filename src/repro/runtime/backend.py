@@ -57,8 +57,12 @@ class Backend(Protocol):
         ...
 
     def kv_bytes_loaded(self) -> int:
-        """Monotonic counter of KV-cache bytes materialized so far (0 for
-        backends that never touch a cache store)."""
+        """Monotonic counter of KV-cache bytes materialized so far *by the
+        calling thread* (0 for backends that never touch a cache store).
+        Thread-scoped so `run_operator`'s before/after deltas stay exact
+        when independent flushes overlap on a dispatcher's thread pool —
+        a process-global counter would interleave concurrent loads into
+        each other's deltas and double-count."""
         ...
 
 
@@ -134,7 +138,9 @@ class KVCacheBackend(RegistryBackend):
             include_cheap=include_cheap))
 
     def kv_bytes_loaded(self) -> int:
-        return self.engine.store.bytes_loaded
+        # thread-local counter: a flush runs entirely on one dispatcher
+        # thread, so per-call deltas are exact under concurrent dispatch
+        return self.engine.store.bytes_loaded_local
 
 
 class ReferenceBackend(RegistryBackend):
@@ -154,7 +160,7 @@ class ReferenceBackend(RegistryBackend):
         super().__init__(gold_registry)
 
     def kv_bytes_loaded(self) -> int:
-        return self.engine.store.bytes_loaded
+        return self.engine.store.bytes_loaded_local
 
 
 def as_backend(registry_or_backend) -> Backend:

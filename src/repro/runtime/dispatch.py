@@ -193,11 +193,16 @@ def resolve_dispatcher(spec=None) -> Tuple[Any, bool]:
         raise TypeError(f"cannot resolve {type(spec)!r} to a Dispatcher")
     kind, _, arg = spec.partition(":")
     n = int(arg) if arg else None
+    if n is not None and n <= 0:
+        raise ValueError(f"dispatcher spec {spec!r}: worker/shard count "
+                         f"must be positive, got {n}")
     if kind == "inline":
         return InlineDispatcher(), True
     if kind == "threads":
-        return ThreadPoolDispatcher(n or _DEFAULT_THREADS), True
+        return ThreadPoolDispatcher(
+            n if n is not None else _DEFAULT_THREADS), True
     if kind == "sharded":
-        return ShardedDispatcher(n or _DEFAULT_SHARDS), True
+        return ShardedDispatcher(
+            n if n is not None else _DEFAULT_SHARDS), True
     raise ValueError(f"unknown dispatcher spec {spec!r} "
                      "(expected inline | threads[:N] | sharded[:N])")

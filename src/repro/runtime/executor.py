@@ -27,7 +27,14 @@ every dispatcher produces identical per-tuple decisions.
 
 Every stage flush is timed and counted into per-stage StageStats — wall
 time, tuple counts, LLM calls, KV-cache bytes touched — the uniform
-telemetry the benchmarks record.
+telemetry the benchmarks record. All StageStats counters are *exact*
+under every dispatcher: KV bytes come from thread-scoped counters (a
+flush runs entirely on one dispatcher thread), so overlapping flushes
+cannot double-count each other's loads. The final RuntimeResult reports
+both ``runtime_s`` (the sum of measured operator time across all flushes
+— total work) and ``wall_s`` (elapsed wall clock — what a caller actually
+waited); under a parallel dispatcher wall_s < runtime_s is precisely the
+overlap speedup, which a single summed number used to hide.
 
 Two consumption modes share one implementation: ``run_plan`` returns the
 final RuntimeResult, and ``iter_plan`` is a generator that additionally
@@ -41,7 +48,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import (Any, Deque, Dict, Generator, List, Optional, Sequence,
                     Tuple)
 
@@ -65,10 +72,12 @@ class StageStats:
     wall_s: float = 0.0        # measured operator wall time
     n_tuples: int = 0          # tuples this stage scored
     n_llm_calls: int = 0       # tuples scored by LLM-backed operators
-    kv_bytes: int = 0          # KV-cache bytes materialized for this stage
-    #                            (approximate under concurrent dispatch:
-    #                            overlapping flushes share one monotonic
-    #                            counter, so deltas can double-count)
+    kv_bytes: int = 0          # KV-cache bytes of the scored tuples'
+    #                            profiles (exact + schedule-invariant:
+    #                            backends count per calling thread and
+    #                            per requested tuple, so neither flush
+    #                            overlap nor shape-bucket padding can
+    #                            distort the counter)
     n_batches: int = 0         # flushes (coalesced batches) executed
 
     @property
@@ -76,6 +85,31 @@ class StageStats:
         """Mean coalesced flush size — the batch size the cost model's
         CostCurve amortizes fixed per-call overhead over."""
         return self.n_tuples / max(self.n_batches, 1)
+
+    def add_flush(self, out: "_OperatorOutcome", n_scored: int) -> None:
+        """Account one completed flush of `n_scored` tuples."""
+        self.wall_s += out.wall_s
+        self.n_tuples += n_scored
+        self.n_batches += 1
+        self.kv_bytes += out.kv_bytes
+        if out.uses_llm:
+            self.n_llm_calls += n_scored
+
+    def merge(self, other: "StageStats") -> None:
+        """Fold another stats row for the same stage into this one — the
+        single counter-summation used by shard merging and the stream's
+        live telemetry, so a new counter field cannot be summed in one
+        place and silently dropped in another."""
+        self.wall_s += other.wall_s
+        self.n_tuples += other.n_tuples
+        self.n_llm_calls += other.n_llm_calls
+        self.kv_bytes += other.kv_bytes
+        self.n_batches += other.n_batches
+
+    def copy(self) -> "StageStats":
+        return StageStats(self.op_name, self.logical_idx, self.stage,
+                          self.wall_s, self.n_tuples, self.n_llm_calls,
+                          self.kv_bytes, self.n_batches)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"op_name": self.op_name, "logical_idx": self.logical_idx,
@@ -87,7 +121,19 @@ class StageStats:
 
 @dataclass
 class RuntimeResult:
-    """Result of executing a plan through the streaming runtime."""
+    """Result of executing a plan through the streaming runtime.
+
+    Two time fields, deliberately distinct: ``runtime_s`` sums measured
+    operator wall time over every flush (total work done — invariant
+    across dispatchers up to timing noise), while ``wall_s`` is the
+    elapsed wall clock of the execution itself, including scheduling.
+    Time the ``iter_plan`` generator spends *suspended at a yield* (the
+    consumer holding a partition) is excluded — wall_s measures the
+    engine, not the caller's loop body, so ``.stream()`` and
+    ``.execute()`` of the same query report comparable numbers. Under a
+    parallel dispatcher ``wall_s < runtime_s``; their ratio is the
+    realized overlap speedup.
+    """
     accepted: np.ndarray                  # (N,) bool — in the result set
     map_values: Dict[int, np.ndarray]     # logical idx -> values (N,)
     runtime_s: float                      # sum of measured operator time
@@ -96,6 +142,16 @@ class RuntimeResult:
     n_partitions: int = 1
     dispatcher: str = "inline"            # dispatch layer that executed it
     n_workers: int = 1                    # its concurrency (1 = serial)
+    wall_s: float = 0.0                   # elapsed wall clock, end to end
+    plan: Optional[PhysicalPlan] = None   # the plan that produced this
+    #                                       result — EXPLAIN ANALYZE must
+    #                                       pair measured stats with the
+    #                                       plan that actually executed,
+    #                                       never a re-derived one
+    partition_size: Optional[int] = None  # effective ingest step actually
+    #                                       used (None: whole corpus)
+    coalesce: Optional[int] = None        # effective flush threshold
+    #                                       actually used
 
     @property
     def stage_times(self) -> List[Tuple[str, float, int]]:
@@ -109,7 +165,18 @@ class PartitionResult:
     emitted by ``iter_plan`` as soon as every tuple in the slice has
     cleared the whole cascade. Concatenating the slices of all emitted
     partitions (in order) reproduces the final RuntimeResult's
-    ``accepted`` / ``map_values`` exactly."""
+    ``accepted`` / ``map_values`` exactly.
+
+    ``stage_stats`` carries the per-stage telemetry *delta* accounted
+    since the previous partition was emitted (stages with no activity in
+    the window are omitted; when several partitions settle at the same
+    instant the first carries the whole window and the rest are empty).
+    Summing the deltas of every emitted partition reproduces the final
+    RuntimeResult.stage_stats exactly — integer counters bit-for-bit,
+    float wall times up to summation order — so a streaming consumer can
+    maintain live, truthful progress telemetry at zero extra cost. Under
+    a sharding dispatcher each partition is one corpus shard and its
+    stage_stats are that shard's full per-stage stats."""
     index: int                            # partition ordinal, corpus order
     lo: int                               # global start index (inclusive)
     hi: int                               # global stop index (exclusive)
@@ -117,6 +184,20 @@ class PartitionResult:
     map_values: Dict[int, np.ndarray]     # logical idx -> values (hi-lo,);
     #                                       one entry per SemMap in the query
     #                                       (uncommitted tuples hold 0)
+    stage_stats: List[StageStats] = field(default_factory=list)
+    wall_s: float = 0.0                   # streaming dispatch: engine
+    #                                       time elapsed since the
+    #                                       previous emission (first:
+    #                                       since start; consumer hold at
+    #                                       yields excluded) — deltas sum
+    #                                       to <= the run's wall_s.
+    #                                       Sharding dispatch: the shard's
+    #                                       own elapsed execution; shards
+    #                                       overlap, so these do NOT sum
+    #                                       to elapsed time (they sum to
+    #                                       ~n_workers x it) — use the
+    #                                       final RuntimeResult.wall_s
+    #                                       for end-to-end elapsed
 
     def __len__(self) -> int:
         return self.hi - self.lo
@@ -327,9 +408,23 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     coalesce = DEFAULT_COALESCE if coalesce is None \
         else max(int(coalesce), 1)
 
+    t_start = time.perf_counter()
+    # execution-active wall clock: accumulated across segments between
+    # yields, so time the consumer spends holding a partition does not
+    # masquerade as engine time
+    active_s = 0.0
+    seg_t0 = t_start
     state = _CascadeState(N, sem_ops)
     stats = [StageStats(st.op_name, st.logical_idx, st.stage)
              for st in plan.stages]
+    # per-partition telemetry window: every completed flush is accounted
+    # twice — into the run totals above and into this delta window, which
+    # the next emitted partition carries away (and resets). Windows
+    # therefore tile the run's stats exactly: summing the stage_stats of
+    # all emitted partitions reproduces the final totals.
+    window = [StageStats(st.op_name, st.logical_idx, st.stage)
+              for st in plan.stages]
+    t_last_emit = t_start
     # incremental delivery: a tuple is *settled* once it has passed (or
     # been skipped by) every stage — no later flush can touch it, so its
     # decisions are final. Partitions are emitted in corpus order as soon
@@ -338,6 +433,18 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     bounds: List[Tuple[int, int]] = []    # partition [lo, hi) slices
     next_emit = 0
 
+    def take_window() -> Tuple[List[StageStats], float]:
+        """Hand the current telemetry window (active stages only + wall
+        elapsed since the previous emission) to a settling partition and
+        start a fresh one."""
+        nonlocal window, t_last_emit
+        taken = [sg for sg in window if sg.n_batches > 0]
+        window = [StageStats(st.op_name, st.logical_idx, st.stage)
+                  for st in plan.stages]
+        now = time.perf_counter()
+        elapsed, t_last_emit = now - t_last_emit, now
+        return taken, elapsed
+
     def ready_partitions() -> List[PartitionResult]:
         nonlocal next_emit
         out = []
@@ -345,9 +452,26 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
             lo, hi = bounds[next_emit]
             if not settled[lo:hi].all():
                 break
-            out.append(state.partition_result(next_emit, lo, hi))
+            pr = state.partition_result(next_emit, lo, hi)
+            pr.stage_stats, pr.wall_s = take_window()
+            out.append(pr)
             next_emit += 1
         return out
+
+    def emit(parts: List[PartitionResult]):
+        """Yield settled partitions with the execution clock paused — a
+        consumer holding the generator between yields must not inflate
+        wall_s or the next partition's telemetry window."""
+        nonlocal active_s, seg_t0, t_last_emit
+        if not parts:
+            return
+        paused = time.perf_counter()
+        active_s += paused - seg_t0
+        for pr in parts:
+            yield pr
+        resumed = time.perf_counter()
+        seg_t0 = resumed
+        t_last_emit += resumed - paused
     # pending[s]: global indices that stages < s have fully processed and
     # stage s has not yet looked at (its coalescing buffer). n_pending
     # counts the tuples stage s would actually SCORE — a tuple's
@@ -386,13 +510,8 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         out = handle.result()
         st = plan.stages[s]
         state.apply(st, run_idx, out)
-        sg = stats[s]
-        sg.wall_s += out.wall_s
-        sg.n_tuples += int(run_idx.size)
-        sg.n_batches += 1
-        sg.kv_bytes += out.kv_bytes
-        if out.uses_llm:
-            sg.n_llm_calls += int(run_idx.size)
+        stats[s].add_flush(out, int(run_idx.size))
+        window[s].add_flush(out, int(run_idx.size))
         enqueue(s + 1, idx)
 
     def submit_flush(s: int):
@@ -444,8 +563,7 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         settled[idx[~alive]] = True   # relational rejects never enter
         enqueue(0, idx[alive])
         pump()
-        for pr in ready_partitions():
-            yield pr
+        yield from emit(ready_partitions())
     # drain: a stage's final flush runs only once nothing upstream —
     # buffered or in flight — can still feed it; otherwise settle the
     # oldest in-flight flush and re-examine
@@ -455,10 +573,8 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
             submit_flush(s)
         else:
             complete_oldest()
-        for pr in ready_partitions():
-            yield pr
-    for pr in ready_partitions():     # everything is settled post-drain
-        yield pr
+        yield from emit(ready_partitions())
+    yield from emit(ready_partitions())   # all settled post-drain
 
     executed = [sg for sg in stats if sg.n_batches > 0]
     return RuntimeResult(
@@ -468,7 +584,10 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         stage_stats=executed,
         n_llm_tuples=sum(sg.n_llm_calls for sg in executed),
         n_partitions=n_parts,
-        dispatcher=disp.name, n_workers=disp.n_workers)
+        dispatcher=disp.name, n_workers=disp.n_workers,
+        wall_s=active_s + (time.perf_counter() - seg_t0), plan=plan,
+        partition_size=None if partition_size is None else part,
+        coalesce=coalesce)
 
 
 def merge_stage_stats(per_shard: Sequence[Sequence[StageStats]],
@@ -481,15 +600,9 @@ def merge_stage_stats(per_shard: Sequence[Sequence[StageStats]],
             key = (sg.logical_idx, sg.stage, sg.op_name)
             m = merged.get(key)
             if m is None:
-                merged[key] = StageStats(
-                    sg.op_name, sg.logical_idx, sg.stage, sg.wall_s,
-                    sg.n_tuples, sg.n_llm_calls, sg.kv_bytes, sg.n_batches)
+                merged[key] = sg.copy()
             else:
-                m.wall_s += sg.wall_s
-                m.n_tuples += sg.n_tuples
-                m.n_llm_calls += sg.n_llm_calls
-                m.kv_bytes += sg.kv_bytes
-                m.n_batches += sg.n_batches
+                m.merge(sg)
     out = []
     for st in plan.stages:
         key = (st.logical_idx, st.stage, st.op_name)
@@ -512,8 +625,18 @@ def _stream_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     implementation fans shards out on a thread pool over one shared
     engine. One PartitionResult is emitted per shard once the scatter
     completes (shards finish in parallel, so finer-grained emission would
-    not be in corpus order anyway).
+    not be in corpus order anyway); each carries its shard's full
+    per-stage StageStats, so the per-partition deltas still sum to the
+    merged final stats exactly.
+
+    ``runtime_s`` sums operator time over every shard (total work), while
+    ``wall_s`` is the elapsed scatter wall clock — a K-worker scatter
+    with balanced shards reports wall_s ~= runtime_s / K, the parallel
+    speedup the summed number cannot show.
     """
+    t_start = time.perf_counter()
+    active_s = 0.0                # engine time only: the clock pauses
+    seg_t0 = t_start              # while the consumer holds a yield
     N = len(items)
     bounds = disp.shard_bounds(N)
     inline = InlineDispatcher()
@@ -535,10 +658,14 @@ def _stream_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
             if li not in map_values:
                 map_values[li] = np.zeros(N, object)
             map_values[li][lo:hi] = vals
-        yield PartitionResult(
+        pr = PartitionResult(
             pi, lo, hi, rr.accepted.copy(),
             {li: (rr.map_values[li].copy() if li in rr.map_values
-                  else np.zeros(hi - lo, object)) for li in map_lis})
+                  else np.zeros(hi - lo, object)) for li in map_lis},
+            stage_stats=rr.stage_stats, wall_s=rr.wall_s)
+        active_s += time.perf_counter() - seg_t0
+        yield pr
+        seg_t0 = time.perf_counter()
     stats = merge_stage_stats([rr.stage_stats for rr in shards], plan)
     return RuntimeResult(
         accepted=accepted,
@@ -547,4 +674,9 @@ def _stream_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         stage_stats=stats,
         n_llm_tuples=sum(rr.n_llm_tuples for rr in shards),
         n_partitions=sum(rr.n_partitions for rr in shards),
-        dispatcher=disp.name, n_workers=disp.n_workers)
+        dispatcher=disp.name, n_workers=disp.n_workers,
+        wall_s=active_s + (time.perf_counter() - seg_t0), plan=plan,
+        partition_size=None if partition_size is None
+        else max(int(partition_size), 1),
+        coalesce=DEFAULT_COALESCE if coalesce is None
+        else max(int(coalesce), 1))

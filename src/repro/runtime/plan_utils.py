@@ -56,14 +56,20 @@ def gold_membership(profiles: Sequence[ProfiledPipeline]) -> np.ndarray:
     return g
 
 
-def pipelines_data(profiles: Sequence[ProfiledPipeline]
+def pipelines_data(profiles: Sequence[ProfiledPipeline], measured=None
                    ) -> List[R.PipelineData]:
     """Lift numpy profiling results into the relaxation's jnp PipelineData.
 
     Profiles carrying fitted CostCurves split cost into marginal per-tuple
     and fixed per-call components (plus the op's memory-budgeted batch
     cap), activating the batch-size-aware cost model; profiles without
-    curves keep the scalar measured per-tuple cost."""
+    curves keep the scalar measured per-tuple cost.
+
+    `measured` (a core.profiling.MeasuredBatchStore, optional) supplies
+    each op's measured flush width from past executions: ops with a
+    recorded `mean_batch` are priced at it instead of the static
+    BatchHint width (unmeasured ops get NaN, the relaxation's
+    fall-back-to-hint marker)."""
     out = []
     for p in profiles:
         if p.cost_curves is not None:
@@ -74,6 +80,13 @@ def pipelines_data(profiles: Sequence[ProfiledPipeline]
         else:
             costs = jnp.asarray(p.costs)
             fixed = None
+        meas_width = None
+        if measured is not None and len(measured):
+            widths = [measured.mean_batch(name) for name in p.op_names]
+            if any(w is not None for w in widths):
+                meas_width = jnp.asarray(
+                    [np.nan if w is None else w for w in widths],
+                    jnp.float32)
         out.append(R.PipelineData(
             scores=jnp.asarray(p.scores),
             costs=costs,
@@ -81,7 +94,8 @@ def pipelines_data(profiles: Sequence[ProfiledPipeline]
             correct=None if p.correct is None else jnp.asarray(p.correct),
             fixed=fixed,
             batch_cap=None if p.batch_caps is None
-            else jnp.asarray(p.batch_caps, jnp.float32)))
+            else jnp.asarray(p.batch_caps, jnp.float32),
+            meas_width=meas_width))
     return out
 
 

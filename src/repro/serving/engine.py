@@ -148,7 +148,7 @@ class ServingEngine:
             pad = _bucket(len(ids)) - len(ids)     # shape-bucketed batches
             cache, _ = self.store.load_batch(
                 em.cfg, profile, ids + ids[:1] * pad,
-                headroom=len(query_tokens) + 2)
+                headroom=len(query_tokens) + 2, n_real=len(ids))
             q = jnp.asarray([list(query_tokens)] * (len(ids) + pad),
                             jnp.int32)
             logits, _ = fn(em.params, cache, q)
@@ -174,7 +174,7 @@ class ServingEngine:
             pad = _bucket(len(ids)) - len(ids)
             cache, _ = self.store.load_batch(
                 em.cfg, profile, ids + ids[:1] * pad,
-                headroom=len(query_tokens) + 2)
+                headroom=len(query_tokens) + 2, n_real=len(ids))
             q = jnp.asarray([list(query_tokens)] * (len(ids) + pad),
                             jnp.int32)
             logits, _ = fn(em.params, cache, q)

@@ -273,6 +273,103 @@ def test_stream_close_abandons_execution(counting_session):
 
 
 # ---------------------------------------------------------------------------
+# exact KV-bytes telemetry (engine-backed; profiles already built)
+# ---------------------------------------------------------------------------
+
+def test_kv_bytes_parity_across_dispatchers(world):
+    """KV-bytes accounting must be exact under concurrent dispatch: the
+    counter is thread-scoped and each tuple's cache shard is loaded
+    exactly once per stage that scores it, so per-stage kv_bytes are
+    bit-identical across inline / threads / sharded — the old
+    process-global counter double-counted overlapping flushes."""
+    ds, sess = world
+    frame = _frame(sess, ds)
+    by_disp = {}
+    for disp in ("inline", "threads:3", "sharded:2"):
+        res = frame.execute(partition_size=30, dispatcher=disp)
+        by_disp[disp] = {(s.logical_idx, s.stage, s.op_name): s.kv_bytes
+                         for s in res.stage_stats}
+        # engine-backed LLM stages must actually touch the cache store
+        assert sum(by_disp[disp].values()) > 0, disp
+    ref = by_disp["inline"]
+    for disp in ("threads:3", "sharded:2"):
+        assert by_disp[disp] == ref, f"kv_bytes drifted under {disp}"
+
+
+# ---------------------------------------------------------------------------
+# corpus memo keys survive GC (no id() reuse)
+# ---------------------------------------------------------------------------
+
+class _KeylessItem:
+    """Corpus item without an item_id: exercises the object-token path."""
+
+    def __init__(self, idx):
+        self.idx = idx
+        self.row = {}
+        self.tokens = [idx % 7]
+
+
+class _IdxFilter(PhysicalOperator):
+    """Scores by `it.idx` (no item_id needed), counting scored tuples."""
+    uses_llm = False
+
+    def __init__(self, name, task_id, counter, is_gold=False):
+        self.name = name
+        self.task_id = task_id
+        self.counter = counter
+        self.is_gold = is_gold
+
+    def run_filter(self, items, op):
+        self.counter["scored"] += len(items)
+        idx = np.asarray([it.idx for it in items], np.float64)
+        return np.asarray(
+            3.0 * np.sin(idx * 12.9898 + self.task_id * 78.233), np.float32)
+
+
+def test_corpus_key_not_recycled_after_gc():
+    """Two distinct corpora must never share a memo key, even when GC
+    frees the first and CPython hands its object ids to the second —
+    id()-based keys silently served corpus A's plan for corpus B."""
+    import gc
+    counter = {"scored": 0}
+    cheap = _IdxFilter("idx-cheap", 1, counter)
+    gold = _IdxFilter("idx-gold", 2, counter, is_gold=True)
+    sess = Session(backend=OracleBackend(lambda op: [cheap, gold]),
+                   planner=FAST, sample_frac=0.5)
+
+    def make_corpus():
+        return [_KeylessItem(i) for i in range(24)]
+
+    a = make_corpus()
+    key_a = sess._corpus_key(a)
+    q = Query([SemFilter("count me", 1)],
+              target_recall=0.7, target_precision=0.7)
+    sess.plan(q, a)
+    scored_after_a = counter["scored"]
+    assert scored_after_a > 0
+
+    del a
+    gc.collect()
+    b = make_corpus()                 # same length, same lead tokens —
+    key_b = sess._corpus_key(b)       # ids may be recycled by CPython
+    assert key_a != key_b
+    sess.plan(q, b)                   # must re-profile, not reuse A's plan
+    assert counter["scored"] > scored_after_a
+    # stable across repeated calls for the *same* corpus (memo works)
+    assert sess._corpus_key(b) == key_b
+    assert sess.plan(q, b) is sess.plan(q, b)
+
+
+def test_object_tokens_stable_per_object():
+    sess = Session(backend=OracleBackend(
+        lambda op: [_IdxFilter("f", 1, {"scored": 0}, is_gold=True)]))
+    items = [_KeylessItem(i) for i in range(4)]
+    toks = [sess._object_token(it) for it in items]
+    assert len(set(toks)) == len(items)            # distinct objects
+    assert toks == [sess._object_token(it) for it in items]  # stable
+
+
+# ---------------------------------------------------------------------------
 # top-level package surface
 # ---------------------------------------------------------------------------
 

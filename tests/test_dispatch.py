@@ -40,6 +40,17 @@ def test_resolve_specs():
         resolve_dispatcher(42)
 
 
+@pytest.mark.parametrize("spec", ["threads:0", "sharded:0", "threads:-2",
+                                  "sharded:-1"])
+def test_resolve_rejects_nonpositive_counts(spec):
+    """threads:0 / sharded:0 must raise, not silently coerce to the
+    defaults — a zero-worker request is a config bug, and masking it
+    would make a benchmark 'sharded:0' run report default-shard numbers
+    under a zero-shard label."""
+    with pytest.raises(ValueError, match="must be positive"):
+        resolve_dispatcher(spec)
+
+
 def test_resolve_env_default(monkeypatch):
     monkeypatch.delenv("STRETTO_DISPATCHER", raising=False)
     d, _ = resolve_dispatcher(None)
