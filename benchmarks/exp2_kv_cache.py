@@ -19,6 +19,7 @@ from benchmarks.common import (LG_RATIOS, SM_RATIOS, World,
 from repro.core import PlannerConfig, plan_query
 from repro.data.synthetic import (TOK_NO, TOK_YES, filter_query_token,
                                   map_query_token, value_token)
+from repro.runtime import stage_stats_by_engine
 
 
 def ladder(world: World, ds_name: str, n_tasks: int = 4) -> List[Dict]:
@@ -65,6 +66,7 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
                 est = {}
                 sel_counter = collections.Counter()
                 stats = []
+                kv_by_engine: Dict[str, int] = {}
                 for tag, backend in (("full", world.backend),
                                      ("nocomp", world.backend_nocomp)):
                     plan = plan_query(q, ds.items, backend, planner_cfg,
@@ -77,6 +79,14 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
                     if tag == "full":
                         for s in plan.stages:
                             sel_counter[s.op_name] += 1
+                        # KV bytes per engine placement: an exact
+                        # partition of the run's total ("" = the
+                        # single default engine)
+                        for eng, d in stage_stats_by_engine(
+                                res.stage_stats).items():
+                            kv_by_engine[eng or "default"] = \
+                                kv_by_engine.get(eng or "default", 0) \
+                                + d["kv_bytes"]
                 rows.append({
                     "dataset": ds_name, "target": target, "query": qi,
                     "runtime_full_s": rt["full"],
@@ -85,6 +95,7 @@ def speedup_with_compression(world: World, targets=(0.5, 0.7, 0.9),
                     "est_cost_nocomp_s": est["nocomp"],
                     "speedup": rt["nocomp"] / max(rt["full"], 1e-9),
                     "selected_ops": dict(sel_counter),
+                    "kv_bytes_by_engine": kv_by_engine,
                     "stage_stats": stats,
                 })
     return rows

@@ -212,6 +212,10 @@ def _smoke_check(snapshot_path: str) -> None:
     assert stages, f"{snapshot_path}: no stage records"
     assert all(r.get("n_batches", 0) >= 1 for r in stages), \
         f"{snapshot_path}: stage record with no flushes"
+    # every stage row must carry its engine placement (exp2 aggregates
+    # KV bytes per engine from it; "" marks single-engine sessions)
+    assert all("engine" in r for r in stages), \
+        f"{snapshot_path}: stage record missing the engine field"
     mean_batches = [r.get("mean_batch", 0) for r in stages]
     assert any(b > 0 for b in mean_batches), \
         f"{snapshot_path}: all mean_batch zero"

@@ -8,8 +8,17 @@ cascade before anything runs, `execute()` runs it through the streaming
 runtime, `metrics()` lazily compares against the gold reference, and
 `stream()` delivers per-partition results incrementally.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py           # one engine
+    PYTHONPATH=src python examples/quickstart.py --pool    # two-tier pool
+
+``--pool`` declares a heterogeneous engine pool instead of the flat
+single-engine config: a "fast" tier serving the small model's compression
+ladder and an "accurate" tier serving the large model (and the gold
+reference). The planner places every cascade stage on one engine —
+EXPLAIN grows an `engine` column, and EXPLAIN ANALYZE reports measured
+per-engine cost and KV bytes that sum exactly to the session totals.
 """
+import argparse
 import os
 import sys
 
@@ -19,9 +28,8 @@ import repro
 from repro.data.synthetic import make_dataset
 
 
-def main():
-    ds = make_dataset("quickstart", 200, seed=3)
-    config = repro.SessionConfig(
+def single_engine_config() -> "repro.SessionConfig":
+    return repro.SessionConfig(
         profile_ratios=(0.0, 0.3, 0.5, 0.8),     # offline cache ladder
         sm_ratios=(0.8, 0.5, 0.0),               # cascade candidates
         lg_ratios=(0.8, 0.5, 0.3),
@@ -29,6 +37,33 @@ def main():
         sample_frac=0.25,
         partition_size=64,                       # streaming execution
     )
+
+
+def pool_config() -> "repro.SessionConfig":
+    """A two-tier engine pool: cheap sm tier + accurate lg tier (which
+    also owns the gold reference operator)."""
+    return repro.SessionConfig(
+        engines=(
+            repro.EngineSpec("fast", models=("sm",),
+                             sm_ratios=(0.8, 0.5, 0.0), lg_ratios=()),
+            repro.EngineSpec("accurate", models=("lg",),
+                             sm_ratios=(), lg_ratios=(0.5, 0.3),
+                             include_cheap=False),
+        ),
+        gold_engine="accurate",
+        planner=repro.PlannerConfig(steps=200, restarts=3),
+        sample_frac=0.25,
+        partition_size=64,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", action="store_true",
+                    help="declare a two-tier heterogeneous engine pool")
+    args = ap.parse_args()
+    ds = make_dataset("quickstart", 200, seed=3)
+    config = pool_config() if args.pool else single_engine_config()
     with repro.Session(config) as sess:
         # --- a semantic query with global quality targets, declared once
         frame = (sess.frame(ds)
@@ -55,6 +90,13 @@ def main():
 
         # --- EXPLAIN ANALYZE: planned vs measured, side by side --------
         print(res.explain_analyze())
+
+        if args.pool:
+            # per-engine measured totals partition the run exactly
+            for eng, d in sorted(res.engine_totals().items()):
+                print(f"engine {eng}: {d['n_tuples']} tuples, "
+                      f"{d['n_llm_calls']} LLM calls, "
+                      f"{d['kv_bytes'] / 1e6:.1f} MB KV loaded")
 
         # --- streaming: consume partitions as they settle --------------
         print("streaming the same query, 50 tuples per partition:")

@@ -29,6 +29,7 @@ __version__ = "1.1.0"
 _EXPORTS = {
     "Session": "repro.api",
     "SessionConfig": "repro.api",
+    "EngineSpec": "repro.api",
     "SemFrame": "repro.api",
     "ExplainReport": "repro.api",
     "ExplainStage": "repro.api",

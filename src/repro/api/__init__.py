@@ -27,7 +27,7 @@ equal plan stages) holds by construction.
 from repro.api.explain import ExplainReport, ExplainStage
 from repro.api.frame import SemFrame
 from repro.api.result import QueryResult, ResultStream
-from repro.api.session import Session, SessionConfig
+from repro.api.session import EngineSpec, Session, SessionConfig
 
-__all__ = ["ExplainReport", "ExplainStage", "QueryResult", "ResultStream",
-           "SemFrame", "Session", "SessionConfig"]
+__all__ = ["EngineSpec", "ExplainReport", "ExplainStage", "QueryResult",
+           "ResultStream", "SemFrame", "Session", "SessionConfig"]

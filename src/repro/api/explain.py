@@ -39,6 +39,8 @@ class ExplainStage:
     thr_hi: float              # accept above / commit above (maps)
     cost_per_tuple_s: float    # batch-aware effective per-tuple cost
     exp_batch: float           # expected coalesced flush size (0: n/a)
+    engine: str = ""           # engine the planner placed this stage on
+    #                            ("" for single-engine sessions)
     meas_cost_per_tuple_s: Optional[float] = None   # measured wall/tuple
     meas_batch: Optional[float] = None     # measured mean flush size
     meas_tuples: Optional[int] = None      # tuples actually scored
@@ -49,6 +51,7 @@ class ExplainStage:
         out = {"order": self.order, "logical_idx": self.logical_idx,
                "stage": self.stage, "op_name": self.op_name,
                "kind": self.kind, "is_gold": self.is_gold,
+               "engine": self.engine,
                "thr_lo": self.thr_lo, "thr_hi": self.thr_hi,
                "cost_per_tuple_s": self.cost_per_tuple_s,
                "exp_batch": self.exp_batch}
@@ -96,6 +99,10 @@ class ExplainReport:
     measured_partitions: Optional[int] = None
     measured_dispatcher: Optional[str] = None     # what actually ran it
     measured_workers: Optional[int] = None
+    # per-engine measured totals (engine, wall_s, n_tuples, n_llm_calls,
+    # kv_bytes) — exact partition of the run totals; empty until ANALYZE,
+    # rendered only for pooled (multi-engine-tagged) executions
+    measured_engines: Tuple[Tuple[str, float, int, int, int], ...] = ()
 
     @property
     def analyzed(self) -> bool:
@@ -112,7 +119,8 @@ class ExplainReport:
                 order=i, logical_idx=st.logical_idx, stage=st.stage,
                 op_name=st.op_name, kind="map" if st.is_map else "filter",
                 is_gold=st.is_gold, thr_lo=st.thr_lo, thr_hi=st.thr_hi,
-                cost_per_tuple_s=st.cost, exp_batch=st.exp_batch)
+                cost_per_tuple_s=st.cost, exp_batch=st.exp_batch,
+                engine=getattr(st, "engine", ""))
             for i, st in enumerate(plan.stages))
         return cls(
             n_items=len(items),
@@ -164,6 +172,12 @@ class ExplainReport:
             exec_cfg = {"dispatcher": f"{result.dispatcher}",
                         "partition_size": result.partition_size,
                         "coalesce": result.coalesce}
+        from repro.runtime.executor import stage_stats_by_engine
+        per_engine = tuple(
+            (eng, d["wall_s"], d["n_tuples"], d["n_llm_calls"],
+             d["kv_bytes"])
+            for eng, d in sorted(
+                stage_stats_by_engine(result.stage_stats).items()))
         return replace(
             self, stages=tuple(stages),
             measured_runtime_s=result.runtime_s,
@@ -171,6 +185,7 @@ class ExplainReport:
             measured_partitions=result.n_partitions,
             measured_dispatcher=result.dispatcher,
             measured_workers=result.n_workers,
+            measured_engines=per_engine,
             **exec_cfg)
 
     def rows(self) -> List[Dict[str, Any]]:
@@ -195,8 +210,15 @@ class ExplainReport:
             f" bounds R>={self.recall_bound:.3f} "
             f"P>={self.precision_bound:.3f}, "
             f"planned in {self.planning_time_s:.2f}s):")
-        cols = [("#", 2), ("op", 24), ("L/s", 5), ("kind", 6),
-                ("thr_lo", 7), ("thr_hi", 7), ("cost/t", 9), ("batch", 6)]
+        # the engine column appears as soon as any stage carries a pool
+        # placement; single-engine sessions keep the pre-pool table shape
+        engines = any(s.engine for s in self.stages)
+        cols = [("#", 2), ("op", 24)]
+        if engines:
+            eng_w = max(6, max(len(s.engine) for s in self.stages))
+            cols += [("engine", eng_w)]
+        cols += [("L/s", 5), ("kind", 6),
+                 ("thr_lo", 7), ("thr_hi", 7), ("cost/t", 9), ("batch", 6)]
         if self.analyzed:
             # measured columns, planned-vs-measured side by side
             cols += [("meas/t", 9), ("mbatch", 6), ("tuples", 7),
@@ -204,9 +226,18 @@ class ExplainReport:
         out.append("  " + " ".join(f"{name:>{w}}" for name, w in cols))
         for s in self.stages:
             gold = " [gold]" if s.is_gold else ""
+            # pooled operator names carry the engine prefix; the table
+            # shows the placement in its own column instead of twice
+            op = s.op_name
+            if s.engine and op.startswith(s.engine + "/"):
+                op = op[len(s.engine) + 1:]
             row = [
                 f"{s.order:>2}",
-                f"{s.op_name + gold:>24}",
+                f"{op + gold:>24}",
+            ]
+            if engines:
+                row.append(f"{s.engine or '--':>{eng_w}}")
+            row += [
                 f"{f'{s.logical_idx}/{s.stage}':>5}",
                 f"{s.kind:>6}",
                 "     --" if s.is_gold else f"{s.thr_lo:>+7.2f}",
@@ -239,6 +270,12 @@ class ExplainReport:
                 f"(elapsed) partitions={self.measured_partitions} "
                 f"dispatcher={self.measured_dispatcher}"
                 f":{self.measured_workers}")
+            if any(eng for eng, *_ in self.measured_engines):
+                for eng, wall, tuples, llm, kv in self.measured_engines:
+                    out.append(
+                        f"  engine {eng or '--'}: wall_s={wall:.2f} "
+                        f"tuples={tuples} llm_calls={llm} "
+                        f"kvMB={kv / 1e6:.1f}")
         return "\n".join(out)
 
     def __str__(self) -> str:

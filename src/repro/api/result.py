@@ -67,6 +67,14 @@ class QueryResult:
     def stage_stats(self) -> List[StageStats]:
         return self.raw.stage_stats
 
+    def engine_totals(self) -> Dict[str, Dict[str, Any]]:
+        """Measured execution totals per engine (wall_s, n_tuples,
+        n_llm_calls, kv_bytes, n_batches) — an exact partition of the
+        run's totals, since every stage runs on exactly one engine.
+        Single-engine sessions report one "" bucket."""
+        from repro.runtime.executor import stage_stats_by_engine
+        return stage_stats_by_engine(self.raw.stage_stats)
+
     @property
     def n_llm_tuples(self) -> int:
         return self.raw.n_llm_tuples

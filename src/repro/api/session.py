@@ -1,11 +1,21 @@
 """Session: engine lifecycle + configuration behind the declarative API.
 
 A Session owns everything `examples/quickstart.py` used to hand-wire:
-the CacheStore, the ServingEngine, planted-model registration, KV-cache
-profile building (the paper's offline phase), runtime backend
+the CacheStore(s), the ServingEngine(s), planted-model registration,
+KV-cache profile building (the paper's offline phase), runtime backend
 construction, and the planner/executor configuration — all declared once
 in a `SessionConfig`. Queries are built against it with
 ``session.frame(items)`` (see repro.api.frame).
+
+Engines are declarative and heterogeneous: ``SessionConfig(engines=
+(EngineSpec("fast", ...), EngineSpec("accurate", ...)))`` declares a
+named pool — each spec owns its model zoo, compression ladder, cache
+store and serving limits, the session builds and profiles each engine
+lazily per corpus, and the runtime backend becomes a `PoolBackend` whose
+candidate union lets the planner place every cascade stage on one
+engine. The legacy flat fields (`models`/`sm_ratios`/`lg_ratios`/...)
+compile to a single spec named "default" and stay bit-identical to
+pre-pool sessions.
 
 The Session compiles to, and never bypasses, the stable internal layer:
 plans come from `core.planner.plan_query`, execution goes through
@@ -34,11 +44,124 @@ from repro.runtime.plan_utils import gold_plan_for
 _UNSET = object()     # "inherit the session default" sentinel
 
 
+def _affinity_workers(dispatcher) -> Optional[int]:
+    """Normalize an EngineSpec.dispatcher affinity declaration to a thread
+    count: an int, or a ``threads[:N]`` spec string. None: no affinity."""
+    if dispatcher is None:
+        return None
+    if isinstance(dispatcher, int):
+        n = dispatcher
+    elif isinstance(dispatcher, str):
+        kind, _, arg = dispatcher.partition(":")
+        if kind != "threads":
+            raise ValueError(
+                f"engine dispatcher affinity {dispatcher!r}: only "
+                f"'threads[:N]' (or an int worker count) is supported")
+        n = int(arg) if arg else 1
+    else:
+        raise ValueError(f"cannot read engine dispatcher affinity "
+                         f"{dispatcher!r} (int or 'threads[:N]')")
+    if n <= 0:
+        raise ValueError(f"engine dispatcher affinity must be positive, "
+                         f"got {n}")
+    return n
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """One named serving engine in a Session's pool.
+
+    Each spec owns a full engine identity: its model zoo, its compression
+    ladder (and therefore its candidate operators), its cache store, its
+    memory/batch limits — so a pool can mix a small fast tier against a
+    large accurate tier and let the planner place every stage.
+
+      name             — unique engine name; pooled operators are keyed
+                         ``name/op`` everywhere (plans, StageStats,
+                         MeasuredBatchStore, EXPLAIN's engine column)
+      models           — planted-zoo model names this engine registers;
+                         models[0] is the "sm" tier, models[-1] the "lg"
+                         tier (a single entry serves as both)
+      sm_ratios / lg_ratios / include_cheap — candidate ladder, exactly
+                         as the flat SessionConfig fields
+      profile_ratios   — offline ladder to prefill (None: union of the
+                         candidate ladders, plus 0.0 for gold)
+      cache_dir        — this engine's store root (None: session-owned
+                         tempdir, removed on close)
+      prefill_batch / memory_budget_bytes / max_batch / model_seed —
+                         per-engine serving limits, as before
+      dispatcher       — optional thread-affinity hint (int workers or
+                         ``threads[:N]``): under a "threads" session
+                         dispatcher this engine's flushes get a dedicated
+                         pool of that size
+      cost_scale       — static cost multiplier applied to this engine's
+                         candidates when the pool orders them (declare a
+                         remote/expensive tier pricier without faking its
+                         measured wall time)
+    """
+    name: str
+    models: Tuple[str, ...] = ("sm", "lg")
+    sm_ratios: Tuple[float, ...] = (0.8, 0.5, 0.0)
+    lg_ratios: Tuple[float, ...] = (0.8, 0.5, 0.3)
+    include_cheap: bool = True
+    profile_ratios: Optional[Tuple[float, ...]] = None
+    cache_dir: Optional[str] = None
+    prefill_batch: int = 16
+    memory_budget_bytes: float = 2e9
+    max_batch: int = 128
+    model_seed: int = 1
+    dispatcher: Optional[Any] = None
+    cost_scale: float = 1.0
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError("EngineSpec.name must be a non-empty string")
+        if "/" in self.name:
+            raise ValueError(
+                f"EngineSpec.name {self.name!r} must not contain '/' — it "
+                f"is the engine/op separator in pooled operator names")
+        if not self.models:
+            raise ValueError(f"engine {self.name!r} declares no models")
+        if self.cost_scale <= 0:
+            raise ValueError(f"engine {self.name!r}: cost_scale must be "
+                             f"positive, got {self.cost_scale}")
+        _affinity_workers(self.dispatcher)      # validate eagerly
+
+    @property
+    def sm_model(self) -> str:
+        return self.models[0]
+
+    @property
+    def lg_model(self) -> str:
+        return self.models[-1]
+
+    def ladder(self) -> Tuple[float, ...]:
+        """Compression ratios this engine's profiles are built at (gold
+        0.0 always included — its gold operator needs it)."""
+        if self.profile_ratios is not None:
+            return tuple(sorted({0.0, *self.profile_ratios}))
+        return tuple(sorted({0.0, *self.sm_ratios, *self.lg_ratios}))
+
+
 @dataclass(frozen=True)
 class SessionConfig:
     """Everything a Session needs, declared once.
 
-    Engine / offline phase
+    Engines — two equivalent declarations:
+      engines          — a tuple of named EngineSpec entries: the session
+                         serves a heterogeneous pool, the runtime backend
+                         is a PoolBackend unioning every engine's
+                         candidate ladder, and the planner places each
+                         stage on one engine. Names must be unique;
+                         engines=() is an error (declare at least one).
+      <flat fields>    — the legacy single-engine form below; it compiles
+                         to one default EngineSpec (see resolved_engines)
+                         and behaves bit-identically to declaring nothing
+                         but that spec.
+      gold_engine      — which engine's gold operator defines the quality
+                         reference (default: the first declared engine).
+
+    Engine / offline phase (legacy flat form)
       cache_dir        — on-disk cache store root (None: fresh tempdir,
                          removed when the session closes)
       models           — planted-zoo model names to register
@@ -88,6 +211,9 @@ class SessionConfig:
     lg_ratios: Tuple[float, ...] = (0.8, 0.5, 0.3)
     include_cheap: bool = True
 
+    engines: Optional[Tuple[EngineSpec, ...]] = None
+    gold_engine: Optional[str] = None
+
     planner: Optional[PlannerConfig] = None
     sample_frac: float = 0.15
     seed: int = 0
@@ -99,12 +225,52 @@ class SessionConfig:
 
     feedback: Optional[Any] = None
 
+    def __post_init__(self):
+        if self.engines is not None:
+            object.__setattr__(self, "engines", tuple(self.engines))
+            if not self.engines:
+                raise ValueError(
+                    "SessionConfig(engines=()) declares no engines — "
+                    "declare at least one EngineSpec, or omit `engines` "
+                    "for the legacy single-engine form")
+            names = [e.name for e in self.engines]
+            dups = sorted({n for n in names if names.count(n) > 1})
+            if dups:
+                raise ValueError(f"duplicate engine name(s): {dups}")
+        if self.gold_engine is not None:
+            names = [e.name for e in self.resolved_engines()]
+            if self.gold_engine not in names:
+                raise ValueError(
+                    f"gold_engine {self.gold_engine!r} is not a declared "
+                    f"engine (engines: {names})")
+
+    def resolved_engines(self) -> Tuple[EngineSpec, ...]:
+        """The engine pool this config declares. The legacy flat fields
+        (models / sm_ratios / lg_ratios / cache_dir / ...) compile to a
+        single spec named "default" — the back-compat shim that keeps
+        every pre-pool config planning and deciding bit-identically."""
+        if self.engines is not None:
+            return self.engines
+        return (EngineSpec(
+            name="default", models=self.models,
+            sm_ratios=self.sm_ratios, lg_ratios=self.lg_ratios,
+            include_cheap=self.include_cheap,
+            profile_ratios=self.profile_ratios, cache_dir=self.cache_dir,
+            prefill_batch=self.prefill_batch,
+            memory_budget_bytes=self.memory_budget_bytes,
+            max_batch=self.max_batch, model_seed=self.model_seed),)
+
     def ladder(self) -> Tuple[float, ...]:
         """The compression ratios profiles are built at (gold 0.0 always
-        included — the reference backend needs it)."""
-        if self.profile_ratios is not None:
-            return tuple(sorted({0.0, *self.profile_ratios}))
-        return tuple(sorted({0.0, *self.sm_ratios, *self.lg_ratios}))
+        included — the reference backend needs it). Single-engine view
+        only: a pool has one ladder per engine, so ask each resolved
+        EngineSpec instead."""
+        specs = self.resolved_engines()
+        if len(specs) > 1:
+            raise ValueError(
+                "a multi-engine SessionConfig has per-engine ladders; "
+                "call .ladder() on each spec in resolved_engines()")
+        return specs[0].ladder()
 
 
 class Session:
@@ -133,7 +299,7 @@ class Session:
             config = replace(config, **overrides)
         self.config = config
         self._closed = False
-        self._owned_cache_dir: Optional[str] = None
+        self._owned_cache_dirs: List[str] = []
         self._prepared: set = set()
         self._gold_cache: Dict[Any, RuntimeResult] = {}
         self._plan_cache: Dict[Any, PhysicalPlan] = {}
@@ -160,19 +326,46 @@ class Session:
             self.measured = MeasuredBatchStore()
         self.n_replans = 0
 
+        # the declared engine pool: every session resolves to named specs
+        # (legacy flat configs become one spec named "default")
+        self.engine_specs: Tuple[EngineSpec, ...] = config.resolved_engines()
+        self._specs_by_name = {s.name: s for s in self.engine_specs}
+        self.gold_engine_name: str = config.gold_engine \
+            if config.gold_engine is not None else self.engine_specs[0].name
+        self._engine_workers: Dict[str, int] = {}
+        for spec in self.engine_specs:
+            w = _affinity_workers(spec.dispatcher)
+            if w is not None:
+                self._engine_workers[spec.name] = w
+        self._affinity_disp = None
+
         self._owns_engine = engine is None and backend is None
         if backend is not None and engine is None:
+            self.engines: Dict[str, Any] = {}
             self.engine = None
+        elif engine is not None:
+            if len(self.engine_specs) > 1:
+                raise ValueError(
+                    "Session(engine=...) adopts exactly one engine; a "
+                    "multi-engine SessionConfig must let the session "
+                    "build its own pool (or wrap a prebuilt PoolBackend "
+                    "via Session(backend=...))")
+            # adopted engine: it serves the first declared spec's slot
+            self.engines = {self.engine_specs[0].name: engine}
+            self.engine = engine
         else:
-            self.engine = engine if engine is not None \
-                else self._build_engine()
+            self.engines = self._build_engines()
+            self.engine = self.engines[self.engine_specs[0].name]
         self.backend: Backend = as_backend(backend) \
-            if backend is not None else self.backend_for()
+            if backend is not None else self._default_backend()
         if reference is not None:
             self.reference = as_backend(reference)
-        elif self.engine is not None:
+        elif self.engines:
             from repro.runtime.backend import ReferenceBackend
-            self.reference = ReferenceBackend(self.engine)
+            gold_spec = self._specs_by_name[self.gold_engine_name]
+            gold_engine = self.engines.get(gold_spec.name, self.engine)
+            self.reference = ReferenceBackend(gold_engine,
+                                              lg=gold_spec.lg_model)
         else:
             # no engine: the backend's own gold operators (candidates
             # list, gold last) are the reference
@@ -180,23 +373,28 @@ class Session:
 
     # ---------------- lifecycle ----------------
 
-    def _build_engine(self):
+    def _build_engines(self) -> Dict[str, Any]:
         from repro.cache.store import CacheStore
         from repro.data.synthetic import make_planted_params, planted_config
         from repro.serving.engine import ServingEngine
-        cfg = self.config
-        cache_dir = cfg.cache_dir
-        if cache_dir is None:
-            cache_dir = tempfile.mkdtemp(prefix="stretto_session_")
-            self._owned_cache_dir = cache_dir
-        engine = ServingEngine(CacheStore(cache_dir),
-                               memory_budget_bytes=cfg.memory_budget_bytes,
-                               max_batch=cfg.max_batch)
-        for name in cfg.models:
-            mcfg = planted_config(name)
-            engine.register_model(
-                name, mcfg, make_planted_params(mcfg, seed=cfg.model_seed))
-        return engine
+        engines: Dict[str, Any] = {}
+        for spec in self.engine_specs:
+            cache_dir = spec.cache_dir
+            if cache_dir is None:
+                cache_dir = tempfile.mkdtemp(
+                    prefix=f"stretto_session_{spec.name}_")
+                self._owned_cache_dirs.append(cache_dir)
+            eng = ServingEngine(
+                CacheStore(cache_dir),
+                memory_budget_bytes=spec.memory_budget_bytes,
+                max_batch=spec.max_batch)
+            for name in spec.models:
+                mcfg = planted_config(name)
+                eng.register_model(
+                    name, mcfg,
+                    make_planted_params(mcfg, seed=spec.model_seed))
+            engines[spec.name] = eng
+        return engines
 
     def __enter__(self) -> "Session":
         return self
@@ -210,8 +408,12 @@ class Session:
         if self._closed:
             return
         self._closed = True
-        if self._owned_cache_dir is not None:
-            shutil.rmtree(self._owned_cache_dir, ignore_errors=True)
+        if self._affinity_disp is not None:
+            self._affinity_disp.close()
+            self._affinity_disp = None
+        for d in self._owned_cache_dirs:
+            shutil.rmtree(d, ignore_errors=True)
+        self._owned_cache_dirs = []
 
     # ---------------- offline phase ----------------
 
@@ -258,19 +460,24 @@ class Session:
 
     def prepare(self, items: Sequence[Any],
                 ratios: Optional[Sequence[float]] = None) -> None:
-        """Build KV-cache profiles for this corpus (offline phase). Safe
-        to call repeatedly — each (corpus, ladder) is built once."""
-        if self.engine is None:
+        """Build KV-cache profiles for this corpus (offline phase), per
+        engine at each engine's own ladder (`ratios` overrides every
+        ladder). Safe to call repeatedly — each (engine, corpus, ladder)
+        is built once."""
+        if not self.engines:
             return                      # backend-only session: nothing to do
-        ladder = tuple(sorted({0.0, *(ratios or self.config.ladder())}))
-        key = (self._corpus_key(items), ladder)
-        if key in self._prepared:
-            return
-        for name in self.config.models:
-            self.engine.build_profiles(
-                name, items, ratios=list(ladder),
-                prefill_batch=self.config.prefill_batch)
-        self._prepared.add(key)
+        for spec in self.engine_specs:
+            eng = self.engines.get(spec.name)
+            if eng is None:
+                continue
+            ladder = tuple(sorted({0.0, *(ratios or spec.ladder())}))
+            key = (spec.name, self._corpus_key(items), ladder)
+            if key in self._prepared:
+                continue
+            for name in spec.models:
+                eng.build_profiles(name, items, ratios=list(ladder),
+                                   prefill_batch=spec.prefill_batch)
+            self._prepared.add(key)
 
     def _ensure_prepared(self, items: Sequence[Any]) -> None:
         # adopted engines manage their own profiles; session-owned
@@ -280,22 +487,43 @@ class Session:
 
     # ---------------- backends ----------------
 
-    def backend_for(self, *, sm_ratios: Optional[Tuple[float, ...]] = None,
+    def backend_for(self, *, engine: Optional[str] = None,
+                    sm_ratios: Optional[Tuple[float, ...]] = None,
                     lg_ratios: Optional[Tuple[float, ...]] = None,
                     include_cheap: Optional[bool] = None) -> Backend:
-        """A KVCacheBackend over the session engine with an alternative
-        candidate ladder (defaults: the session config's ladder)."""
-        if self.engine is None:
+        """A KVCacheBackend over one session engine (default: the first
+        declared) with an alternative candidate ladder (defaults: that
+        engine's declared ladder). Single-engine view — the session
+        default for pool configs is `_default_backend()`."""
+        if not self.engines:
             raise RuntimeError("session has no engine: it wraps an "
                                "externally supplied backend")
+        name = engine if engine is not None else self.engine_specs[0].name
+        spec = self._specs_by_name.get(name)
+        if spec is None or name not in self.engines:
+            raise ValueError(f"unknown engine {name!r}; session engines: "
+                             f"{sorted(self.engines)}")
         from repro.runtime.backend import KVCacheBackend
-        cfg = self.config
         return KVCacheBackend(
-            self.engine,
-            sm_ratios=sm_ratios if sm_ratios is not None else cfg.sm_ratios,
-            lg_ratios=lg_ratios if lg_ratios is not None else cfg.lg_ratios,
-            include_cheap=cfg.include_cheap if include_cheap is None
+            self.engines[name], sm=spec.sm_model, lg=spec.lg_model,
+            sm_ratios=sm_ratios if sm_ratios is not None else spec.sm_ratios,
+            lg_ratios=lg_ratios if lg_ratios is not None else spec.lg_ratios,
+            include_cheap=spec.include_cheap if include_cheap is None
             else include_cheap)
+
+    def _default_backend(self) -> Backend:
+        """The session's runtime backend: the bare KVCacheBackend for a
+        single-engine config (bit-identical to pre-pool sessions —
+        operator names stay unprefixed), a PoolBackend routing across
+        every declared engine otherwise."""
+        if len(self.engine_specs) == 1:
+            return self.backend_for()
+        from repro.runtime.backend import PoolBackend
+        members = [(spec.name, self.backend_for(engine=spec.name))
+                   for spec in self.engine_specs]
+        return PoolBackend(
+            members, gold=self.gold_engine_name,
+            cost_scales={s.name: s.cost_scale for s in self.engine_specs})
 
     # ---------------- query building ----------------
 
@@ -312,6 +540,39 @@ class Session:
 
     # ---------------- internal layer (plan / execute / gold) ----------
 
+    def _default_dispatcher(self):
+        """The session-default dispatcher argument, honoring per-engine
+        thread affinity: when any EngineSpec declares a `dispatcher`
+        worker hint and the session default resolves to a "threads" spec,
+        a session-owned ThreadPoolDispatcher with dedicated per-engine
+        pools is used (completions still apply in global submission
+        order, so decisions are unchanged)."""
+        spec = self.config.dispatcher
+        if not self._engine_workers:
+            return spec
+        if spec is not None and not isinstance(spec, str):
+            return spec                 # caller-supplied instance wins
+        from repro.runtime.dispatch import (ThreadPoolDispatcher,
+                                            effective_spec)
+        eff = effective_spec(spec)
+        if not eff.startswith("threads"):
+            return spec
+        if self._affinity_disp is None:
+            _, _, arg = eff.partition(":")
+            kwargs: Dict[str, Any] = {
+                "engine_workers": dict(self._engine_workers)}
+            if arg:
+                n = int(arg)
+                if n <= 0:
+                    # same contract as resolve_dispatcher: a bad count
+                    # must fail loudly, not silently clamp to 1 worker
+                    raise ValueError(f"dispatcher spec {eff!r}: "
+                                     f"worker/shard count must be "
+                                     f"positive, got {n}")
+                kwargs["n_workers"] = n
+            self._affinity_disp = ThreadPoolDispatcher(**kwargs)
+        return self._affinity_disp
+
     def _exec_kwargs(self, partition_size=_UNSET, coalesce=_UNSET,
                      dispatcher=_UNSET) -> Dict[str, Any]:
         cfg = self.config
@@ -319,7 +580,7 @@ class Session:
             "partition_size": cfg.partition_size
             if partition_size is _UNSET else partition_size,
             "coalesce": cfg.coalesce if coalesce is _UNSET else coalesce,
-            "dispatcher": cfg.dispatcher
+            "dispatcher": self._default_dispatcher()
             if dispatcher is _UNSET else dispatcher,
         }
 

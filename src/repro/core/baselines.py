@@ -54,7 +54,8 @@ def _plan_from_selection(profiles, selections, thresholds, items_n,
             stages.append(PhysicalPlanStage(
                 logical_idx=li, stage=stage_no, op_name=p.op_names[i],
                 thr_hi=hi, thr_lo=lo, is_map=p.is_map,
-                is_gold=(i == n_ops - 1), cost=float(p.costs[i])))
+                is_gold=(i == n_ops - 1), cost=float(p.costs[i]),
+                engine=p.op_engines[i] if p.op_engines is not None else ""))
     return PhysicalPlan(stages=stages, relational=[], est_cost=est_cost,
                         recall_bound=bounds[0], precision_bound=bounds[1],
                         feasible=feasible, planning_time_s=t_plan)

@@ -83,6 +83,9 @@ class ProfiledPipeline:
     correct: Optional[np.ndarray] = None    # (n_ops, N) value == gold value
     cost_curves: Optional[List[CostCurve]] = None   # (n_ops,) batch-aware
     batch_caps: Optional[np.ndarray] = None  # (n_ops,) max batch (inf: none)
+    op_engines: Optional[List[str]] = None   # (n_ops,) owning engine per op
+    #                                          ("" / None: single-engine
+    #                                          backend, no pool routing)
 
 
 @dataclass
@@ -98,6 +101,10 @@ class PhysicalPlanStage:
     sel_inter: float = 1.0
     sel_intra: float = 1.0
     exp_batch: float = 0.0        # expected coalesced flush size (0: n/a)
+    engine: str = ""              # owning engine of the physical operator
+    #                               ("" for single-engine backends) — the
+    #                               placement the planner decided, carried
+    #                               through FlushTask / StageStats / EXPLAIN
 
 
 @dataclass

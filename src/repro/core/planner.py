@@ -88,11 +88,13 @@ def plan_query(query: Query, items: Sequence[Any], registry: Callable,
                 op_id=len(phys_ops), logical_id=li, stage=stage_no,
                 cost=cost, sel_inter=inter, sel_intra=intra))
             is_gold = i == p.scores.shape[0] - 1
+            engine = p.op_engines[i] if p.op_engines is not None else ""
             stage_meta.append(PhysicalPlanStage(
                 logical_idx=li, stage=stage_no, op_name=p.op_names[i],
                 thr_hi=float(params.thr_hi[i]), thr_lo=float(params.thr_lo[i]),
                 is_map=p.is_map, is_gold=is_gold, cost=cost,
-                sel_inter=inter, sel_intra=intra, exp_batch=exp_batch))
+                sel_inter=inter, sel_intra=intra, exp_batch=exp_batch,
+                engine=engine))
             stage_no += 1
 
     if reorder and len(phys_ops) <= 14:                   # step 4

@@ -271,6 +271,7 @@ def profile_query(query: Query, items: Sequence[Any],
             costs=np.asarray(costs, np.float32),
             cost_curves=curves,
             batch_caps=np.asarray(caps, np.float64),
+            op_engines=[getattr(p, "engine_name", "") for p in ops],
         )
         if is_map:
             vals = np.stack(values)

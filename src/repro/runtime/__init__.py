@@ -24,6 +24,8 @@ _EXPORTS = {
     "KVCacheBackend": "repro.runtime.backend",
     "ReferenceBackend": "repro.runtime.backend",
     "RegistryBackend": "repro.runtime.backend",
+    "PoolBackend": "repro.runtime.backend",
+    "EngineTaggedOperator": "repro.runtime.backend",
     "as_backend": "repro.runtime.backend",
     "StageStats": "repro.runtime.executor",
     "RuntimeResult": "repro.runtime.executor",
@@ -32,6 +34,7 @@ _EXPORTS = {
     "iter_plan": "repro.runtime.executor",
     "run_operator": "repro.runtime.executor",
     "merge_stage_stats": "repro.runtime.executor",
+    "stage_stats_by_engine": "repro.runtime.executor",
     "DEFAULT_COALESCE": "repro.runtime.dispatch",
     "FlushTask": "repro.runtime.dispatch",
     "InlineDispatcher": "repro.runtime.dispatch",

@@ -64,6 +64,13 @@ class FlushTask:
     sem_op: Any              # the logical (semantic) operator
     op_name: str             # physical operator name to resolve
     items: List[Any]         # batch payloads, eligible tuples only
+    engine: str = ""         # owning engine of the stage's operator (""
+    #                          for single-engine sessions): dispatchers
+    #                          with per-engine affinity route on it, and
+    #                          because the executor applies completions in
+    #                          global submission (FIFO) order regardless
+    #                          of which pool ran a task, per-engine
+    #                          routing preserves submission-order parity
 
 
 class _Immediate:
@@ -109,25 +116,44 @@ class ThreadPoolDispatcher:
     name = "threads"
     n_shards = 1
 
-    def __init__(self, n_workers: int = _DEFAULT_THREADS):
+    def __init__(self, n_workers: int = _DEFAULT_THREADS,
+                 engine_workers: Optional[Dict[str, int]] = None):
+        """`engine_workers` declares per-engine thread affinity: flushes
+        whose FlushTask.engine appears in the mapping run on a dedicated
+        pool of that size (engines stop contending for each other's
+        workers); everything else shares the default pool. Completions
+        are still applied by the executor in global submission order, so
+        affinity never changes decisions — only where the overlap
+        happens."""
         self.n_workers = max(int(n_workers), 1)
+        self.engine_workers = {str(k): max(int(v), 1)
+                               for k, v in (engine_workers or {}).items()}
         # in-flight window: enough tasks to keep every worker busy while
         # the main thread prepares the next cohort
-        self.max_pending = 2 * self.n_workers
-        self._pool: Optional[ThreadPoolExecutor] = None
+        total = self.n_workers + sum(self.engine_workers.values())
+        self.max_pending = 2 * total
+        self._pools: Dict[str, ThreadPoolExecutor] = {}
+
+    def _pool_for(self, engine: str) -> ThreadPoolExecutor:
+        key = engine if engine in self.engine_workers else ""
+        pool = self._pools.get(key)
+        if pool is None:
+            workers = self.engine_workers.get(key, self.n_workers)
+            pool = ThreadPoolExecutor(
+                max_workers=workers,
+                thread_name_prefix=f"stretto-flush-{key or 'shared'}")
+            self._pools[key] = pool
+        return pool
 
     def submit(self, task: FlushTask,
                runner: Callable[[FlushTask], Any]) -> Future:
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=self.n_workers,
-                thread_name_prefix="stretto-flush")
-        return self._pool.submit(runner, task)
+        return self._pool_for(getattr(task, "engine", "") or "").submit(
+            runner, task)
 
     def close(self):
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+        for pool in self._pools.values():
+            pool.shutdown(wait=True)
+        self._pools.clear()
 
 
 class ShardedDispatcher:

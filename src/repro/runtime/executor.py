@@ -79,6 +79,11 @@ class StageStats:
     #                            overlap nor shape-bucket padding can
     #                            distort the counter)
     n_batches: int = 0         # flushes (coalesced batches) executed
+    engine: str = ""           # owning engine of the stage's physical
+    #                            operator ("" for single-engine sessions);
+    #                            a stage runs on exactly one engine, so
+    #                            grouping stage rows by this field yields
+    #                            exact per-engine cost / KV-bytes totals
 
     @property
     def mean_batch(self) -> float:
@@ -109,11 +114,12 @@ class StageStats:
     def copy(self) -> "StageStats":
         return StageStats(self.op_name, self.logical_idx, self.stage,
                           self.wall_s, self.n_tuples, self.n_llm_calls,
-                          self.kv_bytes, self.n_batches)
+                          self.kv_bytes, self.n_batches, self.engine)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"op_name": self.op_name, "logical_idx": self.logical_idx,
-                "stage": self.stage, "wall_s": self.wall_s,
+                "stage": self.stage, "engine": self.engine,
+                "wall_s": self.wall_s,
                 "n_tuples": self.n_tuples, "n_llm_calls": self.n_llm_calls,
                 "kv_bytes": self.kv_bytes, "n_batches": self.n_batches,
                 "mean_batch": round(self.mean_batch, 2)}
@@ -415,15 +421,19 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     active_s = 0.0
     seg_t0 = t_start
     state = _CascadeState(N, sem_ops)
-    stats = [StageStats(st.op_name, st.logical_idx, st.stage)
-             for st in plan.stages]
+
+    def fresh_stats() -> List[StageStats]:
+        return [StageStats(st.op_name, st.logical_idx, st.stage,
+                           engine=getattr(st, "engine", ""))
+                for st in plan.stages]
+
+    stats = fresh_stats()
     # per-partition telemetry window: every completed flush is accounted
     # twice — into the run totals above and into this delta window, which
     # the next emitted partition carries away (and resets). Windows
     # therefore tile the run's stats exactly: summing the stage_stats of
     # all emitted partitions reproduces the final totals.
-    window = [StageStats(st.op_name, st.logical_idx, st.stage)
-              for st in plan.stages]
+    window = fresh_stats()
     t_last_emit = t_start
     # incremental delivery: a tuple is *settled* once it has passed (or
     # been skipped by) every stage — no later flush can touch it, so its
@@ -439,8 +449,7 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         start a fresh one."""
         nonlocal window, t_last_emit
         taken = [sg for sg in window if sg.n_batches > 0]
-        window = [StageStats(st.op_name, st.logical_idx, st.stage)
-                  for st in plan.stages]
+        window = fresh_stats()
         now = time.perf_counter()
         elapsed, t_last_emit = now - t_last_emit, now
         return taken, elapsed
@@ -530,7 +539,9 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         op = sem_ops[st.logical_idx]
         backend.resolve(op, st.op_name)   # warm the op cache on this thread
         batch = [items[i] for i in run_idx]
-        handle = disp.submit(FlushTask(s, op, st.op_name, batch), runner)
+        handle = disp.submit(
+            FlushTask(s, op, st.op_name, batch,
+                      engine=getattr(st, "engine", "")), runner)
         inflight.append((s, idx, run_idx, handle))
         while len(inflight) > disp.max_pending:
             complete_oldest()
@@ -588,6 +599,27 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         wall_s=active_s + (time.perf_counter() - seg_t0), plan=plan,
         partition_size=None if partition_size is None else part,
         coalesce=coalesce)
+
+
+def stage_stats_by_engine(stage_stats: Sequence[StageStats]
+                          ) -> Dict[str, Dict[str, Any]]:
+    """Exact per-engine execution totals: each stage runs on exactly one
+    engine, so summing its counters by the engine tag partitions the
+    run's totals — per-engine wall_s / n_tuples / n_llm_calls / kv_bytes
+    sum back to the whole-run numbers bit-for-bit (integer counters) /
+    up to summation order (floats). Single-engine runs report one ""
+    bucket."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for sg in stage_stats:
+        d = out.setdefault(sg.engine, {"wall_s": 0.0, "n_tuples": 0,
+                                       "n_llm_calls": 0, "kv_bytes": 0,
+                                       "n_batches": 0})
+        d["wall_s"] += sg.wall_s
+        d["n_tuples"] += sg.n_tuples
+        d["n_llm_calls"] += sg.n_llm_calls
+        d["kv_bytes"] += sg.kv_bytes
+        d["n_batches"] += sg.n_batches
+    return out
 
 
 def merge_stage_stats(per_shard: Sequence[Sequence[StageStats]],

@@ -32,10 +32,12 @@ def gold_plan_for(query: Query, backend) -> PhysicalPlan:
     backend = as_backend(backend)
     stages = []
     for li, op in enumerate(query.semantic_ops):
+        gold = backend.candidates(op)[-1]
         stages.append(PhysicalPlanStage(
-            logical_idx=li, stage=0, op_name=backend.candidates(op)[-1].name,
+            logical_idx=li, stage=0, op_name=gold.name,
             thr_hi=0.0, thr_lo=0.0, is_map=isinstance(op, SemMap),
-            is_gold=True, cost=1.0))
+            is_gold=True, cost=1.0,
+            engine=getattr(gold, "engine_name", "")))
     return PhysicalPlan(stages=stages,
                         relational=list(query.relational_ops),
                         est_cost=0.0, recall_bound=1.0, precision_bound=1.0,

@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 
 import repro
-from repro.api import Session, SessionConfig
+from repro.api import EngineSpec, Session, SessionConfig
 from repro.core import (PlannerConfig, Query, RelFilter, SemFilter, SemMap,
                         plan_query)
 from repro.core.physical import PhysicalOperator
@@ -370,6 +370,91 @@ def test_object_tokens_stable_per_object():
 
 
 # ---------------------------------------------------------------------------
+# engine pools: config validation (no engine build — cheap)
+# ---------------------------------------------------------------------------
+
+def test_legacy_config_compiles_to_default_engine_spec():
+    """The back-compat shim: flat fields become exactly one spec named
+    "default" carrying every flat value."""
+    cfg = SessionConfig(models=("sm",), sm_ratios=(0.5, 0.0),
+                        lg_ratios=(0.3,), include_cheap=False,
+                        profile_ratios=(0.0, 0.5), prefill_batch=8,
+                        memory_budget_bytes=1e9, max_batch=32, model_seed=7,
+                        cache_dir="/tmp/nowhere")
+    specs = cfg.resolved_engines()
+    assert len(specs) == 1
+    spec = specs[0]
+    assert spec.name == "default"
+    assert spec.models == ("sm",)
+    assert spec.sm_ratios == (0.5, 0.0) and spec.lg_ratios == (0.3,)
+    assert spec.include_cheap is False
+    assert spec.profile_ratios == (0.0, 0.5)
+    assert spec.prefill_batch == 8
+    assert spec.memory_budget_bytes == 1e9 and spec.max_batch == 32
+    assert spec.model_seed == 7 and spec.cache_dir == "/tmp/nowhere"
+    assert spec.ladder() == cfg.ladder()
+    # a single model serves both tiers
+    assert spec.sm_model == "sm" and spec.lg_model == "sm"
+
+
+def test_engine_config_validation():
+    # empty pool is an error (omit `engines` for the legacy form)
+    with pytest.raises(ValueError, match="no engines"):
+        SessionConfig(engines=())
+    # duplicate engine names
+    with pytest.raises(ValueError, match="duplicate"):
+        SessionConfig(engines=(EngineSpec("a"), EngineSpec("a")))
+    # gold engine must be declared
+    with pytest.raises(ValueError, match="gold_engine"):
+        SessionConfig(engines=(EngineSpec("a"),), gold_engine="b")
+    # ... also under the legacy shim (only "default" exists)
+    with pytest.raises(ValueError, match="gold_engine"):
+        SessionConfig(gold_engine="a")
+    assert SessionConfig(gold_engine="default").gold_engine == "default"
+    # spec-level validation fires at construction, not first use
+    with pytest.raises(ValueError, match="non-empty"):
+        EngineSpec("")
+    with pytest.raises(ValueError, match="'/'"):
+        EngineSpec("a/b")
+    with pytest.raises(ValueError, match="models"):
+        EngineSpec("a", models=())
+    with pytest.raises(ValueError, match="cost_scale"):
+        EngineSpec("a", cost_scale=-1.0)
+    with pytest.raises(ValueError, match="affinity"):
+        EngineSpec("a", dispatcher="sharded:2")
+    with pytest.raises(ValueError, match="positive"):
+        EngineSpec("a", dispatcher=0)
+
+
+def test_pool_backend_validation():
+    from repro.runtime import OracleBackend, PoolBackend
+
+    def reg(op):
+        return [_IdxFilter("f", 1, {"scored": 0}, is_gold=True)]
+
+    with pytest.raises(ValueError, match="at least one"):
+        PoolBackend([])
+    with pytest.raises(ValueError, match="duplicate"):
+        PoolBackend([("a", OracleBackend(reg)), ("a", OracleBackend(reg))])
+    with pytest.raises(ValueError, match="gold engine"):
+        PoolBackend([("a", OracleBackend(reg))], gold="b")
+
+    pool = PoolBackend([("a", OracleBackend(reg))])
+    op = SemFilter("f", 1)
+    # an operator referencing an unknown engine fails at resolve time
+    # with a ValueError naming the pool's engines — not deep in a flush
+    with pytest.raises(ValueError, match="unknown engine 'b'"):
+        pool.resolve(op, "b/f")
+    # unknown op on a known engine stays a KeyError (name typo, not a
+    # routing error)
+    with pytest.raises(KeyError):
+        pool.resolve(op, "a/nope")
+    assert pool.member("a") is pool.members["a"]
+    with pytest.raises(ValueError, match="unknown engine"):
+        pool.member("b")
+
+
+# ---------------------------------------------------------------------------
 # top-level package surface
 # ---------------------------------------------------------------------------
 
@@ -377,6 +462,7 @@ def test_repro_reexports():
     assert repro.Session is Session
     assert repro.SessionConfig is SessionConfig
     assert repro.PlannerConfig is PlannerConfig
+    assert repro.EngineSpec is EngineSpec
     from repro.api import SemFrame
     assert repro.SemFrame is SemFrame
     assert "Session" in dir(repro)

@@ -1,0 +1,322 @@
+"""Engine pools: PoolBackend routing, planner placement, per-engine
+telemetry attribution, and back-compat with the flat single-engine config.
+
+Three invariant families:
+
+Parity — a one-engine PoolBackend must decide bit-identically to the
+bare KVCacheBackend it wraps (stage lists equal modulo the ``engine/``
+name prefix), across inline / threads / sharded dispatchers; and the
+legacy flat SessionConfig must plan + decide identically to the explicit
+single-EngineSpec declaration (the shim is a pure compilation step).
+
+Placement — a two-tier pool (fast sm engine + accurate lg engine owning
+gold) plans end to end, the plan mixes engines across stages, and EXPLAIN
+grows the engine column.
+
+Attribution — per-stage StageStats carry the owning engine; grouping by
+it partitions kv_bytes / n_llm_calls / wall_s exactly (verified against
+each engine's own CacheStore byte counter), and EXPLAIN ANALYZE reports
+the same per-engine totals.
+"""
+import numpy as np
+import pytest
+
+from repro.api import EngineSpec, Session, SessionConfig
+from repro.core import PlannerConfig, plan_query
+from repro.data.synthetic import make_dataset
+from repro.runtime import (DEFAULT_COALESCE, PoolBackend,
+                           stage_stats_by_engine, run_plan)
+
+from test_api import _FakeClock
+
+FAST = PlannerConfig(steps=120, restarts=2, snapshots=2)
+
+DISPATCHERS = ("inline", "threads:2", "sharded:2")
+
+
+# ---------------------------------------------------------------------------
+# two-tier pool world: fast sm engine + accurate lg engine (owns gold)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pool_world(tmp_path_factory):
+    ds = make_dataset("pool", 90, seed=7)
+    session = Session(SessionConfig(
+        engines=(
+            EngineSpec("fast", models=("sm",),
+                       sm_ratios=(0.8, 0.5), lg_ratios=(),
+                       cache_dir=str(tmp_path_factory.mktemp("fast"))),
+            EngineSpec("accurate", models=("lg",),
+                       sm_ratios=(), lg_ratios=(0.5,), include_cheap=False,
+                       cache_dir=str(tmp_path_factory.mktemp("accurate"))),
+        ),
+        gold_engine="accurate",
+        planner=FAST, sample_frac=0.35, partition_size=40))
+    session.prepare(ds.items)
+    yield ds, session
+    session.close()
+
+
+def _frame(sess, ds):
+    return (sess.frame(ds.items)
+            .sem_filter("f1", 1)
+            .sem_map("extract v2", 2)
+            .with_guarantees(recall=0.7, precision=0.7))
+
+
+def test_pool_candidates_contract(pool_world):
+    """Union candidates: engine-tagged, unique names, cost-ordered,
+    exactly one gold (the gold engine's), last."""
+    ds, sess = pool_world
+    frame = _frame(sess, ds)
+    for op in frame.to_query().semantic_ops:
+        cands = sess.backend.candidates(op)
+        names = [c.name for c in cands]
+        assert len(set(names)) == len(names)
+        assert all("/" in n for n in names)
+        assert all(c.engine_name in ("fast", "accurate") for c in cands)
+        golds = [c for c in cands if c.is_gold]
+        assert golds == [cands[-1]]
+        assert cands[-1].engine_name == "accurate"
+        costs = [c.cost_model() for c in cands[:-1]]
+        assert costs == sorted(costs)
+
+
+def test_plan_mixes_engines_and_explain_column(pool_world):
+    ds, sess = pool_world
+    frame = _frame(sess, ds)
+    plan = frame.plan()
+    engines = {st.engine for st in plan.stages}
+    # the planted two-tier workload must place stages on both engines
+    assert engines == {"fast", "accurate"}
+    # gold stages live on the gold engine
+    for st in plan.stages:
+        assert st.op_name.startswith(st.engine + "/")
+        if st.is_gold:
+            assert st.engine == "accurate"
+    rep = frame.explain()
+    assert [s.engine for s in rep.stages] == [st.engine
+                                              for st in plan.stages]
+    text = rep.render()
+    assert "engine" in text and "fast" in text and "accurate" in text
+    assert all("engine" in row for row in rep.rows())
+
+
+def test_per_engine_attribution_sums_exactly(pool_world):
+    """Per-stage engine tags partition the run's telemetry exactly: the
+    per-engine groups sum to the session totals, and each engine's KV
+    bytes match its own cache store's counter delta."""
+    ds, sess = pool_world
+    frame = _frame(sess, ds)
+    stores = {name: eng.store for name, eng in sess.engines.items()}
+    before = {name: st.bytes_loaded for name, st in stores.items()}
+    res = frame.execute(dispatcher="inline")
+    deltas = {name: st.bytes_loaded - before[name]
+              for name, st in stores.items()}
+
+    per_engine = res.engine_totals()
+    assert set(per_engine) <= {"fast", "accurate"}
+    # exact partition of the run totals
+    assert sum(d["kv_bytes"] for d in per_engine.values()) \
+        == sum(s.kv_bytes for s in res.stage_stats)
+    assert sum(d["n_llm_calls"] for d in per_engine.values()) \
+        == res.n_llm_tuples
+    assert sum(d["n_tuples"] for d in per_engine.values()) \
+        == sum(s.n_tuples for s in res.stage_stats)
+    # each engine's stage kv_bytes equal its own store's loads
+    for name, delta in deltas.items():
+        assert per_engine.get(name, {"kv_bytes": 0})["kv_bytes"] == delta
+    # the accurate tier did real LLM work in this workload
+    assert per_engine["accurate"]["kv_bytes"] > 0
+    # every executed stage carries a tag consistent with its op name
+    for s in res.stage_stats:
+        assert s.op_name.startswith(s.engine + "/")
+    # EXPLAIN ANALYZE reports the same per-engine totals
+    rep = res.explain_analyze()
+    assert {e: (t, k) for e, _, t, _, k in rep.measured_engines} \
+        == {e: (d["n_tuples"], d["kv_bytes"])
+            for e, d in per_engine.items()}
+    text = rep.render()
+    assert "engine accurate:" in text and "engine fast:" in text
+
+
+@pytest.mark.parametrize("dispatcher", DISPATCHERS)
+def test_pool_execution_parity_across_dispatchers(pool_world, dispatcher):
+    ds, sess = pool_world
+    frame = _frame(sess, ds)
+    ref = frame.execute(dispatcher="inline")
+    res = frame.execute(dispatcher=dispatcher, partition_size=23)
+    np.testing.assert_array_equal(res.accepted, ref.accepted)
+    for li in ref.map_values:
+        np.testing.assert_array_equal(res.map_values[li],
+                                      ref.map_values[li])
+    # per-(engine, stage) counters are schedule-invariant too
+    key = lambda s: (s.engine, s.logical_idx, s.stage, s.op_name)
+    ref_kv = {key(s): (s.kv_bytes, s.n_tuples, s.n_llm_calls)
+              for s in ref.stage_stats}
+    got_kv = {key(s): (s.kv_bytes, s.n_tuples, s.n_llm_calls)
+              for s in res.stage_stats}
+    assert got_kv == ref_kv
+
+
+def test_engine_affinity_dispatcher_parity(pool_world):
+    """Per-engine thread affinity (EngineSpec.dispatcher) routes flushes
+    to dedicated pools without changing a single decision."""
+    from repro.runtime import ThreadPoolDispatcher
+    ds, sess = pool_world
+    frame = _frame(sess, ds)
+    ref = frame.execute(dispatcher="inline")
+    disp = ThreadPoolDispatcher(2, engine_workers={"fast": 1,
+                                                   "accurate": 2})
+    res = frame.execute(dispatcher=disp)
+    disp.close()
+    np.testing.assert_array_equal(res.accepted, ref.accepted)
+    for li in ref.map_values:
+        np.testing.assert_array_equal(res.map_values[li],
+                                      ref.map_values[li])
+
+
+def test_session_builds_affinity_dispatcher():
+    """A 'threads' session default + EngineSpec.dispatcher hints resolve
+    to one session-owned ThreadPoolDispatcher with per-engine pools."""
+    from repro.runtime import ThreadPoolDispatcher
+    cfg = SessionConfig(
+        engines=(EngineSpec("a", dispatcher=2),
+                 EngineSpec("b", dispatcher="threads:3")),
+        dispatcher="threads:2")
+    sess = Session(cfg, backend=lambda op: [])   # no engine build needed
+    disp = sess._default_dispatcher()
+    assert isinstance(disp, ThreadPoolDispatcher)
+    assert disp.engine_workers == {"a": 2, "b": 3}
+    assert disp.n_workers == 2
+    assert sess._default_dispatcher() is disp    # built once, reused
+    sess.close()                                  # closes the dispatcher
+    # without affinity hints the spec passes through untouched
+    sess2 = Session(SessionConfig(dispatcher="threads:2"),
+                    backend=lambda op: [])
+    assert sess2._default_dispatcher() == "threads:2"
+    sess2.close()
+
+
+def test_flush_tasks_carry_engine_tag(pool_world):
+    """Every FlushTask the executor submits is tagged with the stage's
+    owning engine — the hook per-engine dispatch affinity routes on."""
+    from repro.runtime import InlineDispatcher
+    ds, sess = pool_world
+    frame = _frame(sess, ds)
+
+    seen = []
+
+    class Recording(InlineDispatcher):
+        def submit(self, task, runner):
+            seen.append((task.op_name, task.engine))
+            return super().submit(task, runner)
+
+    frame.execute(dispatcher=Recording())
+    assert seen
+    for op_name, engine in seen:
+        assert engine in ("fast", "accurate")
+        assert op_name.startswith(engine + "/")
+
+
+# ---------------------------------------------------------------------------
+# one-engine pool == bare backend; flat config == explicit single spec
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def single_world(tmp_path_factory):
+    ds = make_dataset("pool-single", 70, seed=11)
+    session = Session(SessionConfig(
+        cache_dir=str(tmp_path_factory.mktemp("single")),
+        profile_ratios=(0.0, 0.8),
+        sm_ratios=(0.8, 0.0), lg_ratios=(0.8,),
+        planner=FAST, sample_frac=0.4, partition_size=30))
+    session.prepare(ds.items)
+    yield ds, session
+    session.close()
+
+
+def test_one_engine_pool_bit_identical_to_bare_backend(single_world,
+                                                       monkeypatch):
+    """A PoolBackend wrapping one engine must plan the same cascade
+    (modulo the ``default/`` name prefix) and decide bit-identically to
+    the bare KVCacheBackend, across all dispatchers."""
+    import repro.runtime.executor as executor_mod
+    ds, sess = single_world
+    monkeypatch.setattr(executor_mod, "time", _FakeClock())
+    q = _frame(sess, ds).to_query()
+    pool = PoolBackend([("default", sess.backend)])
+
+    bare_plan = plan_query(q, ds.items, sess.backend, FAST,
+                           sample_frac=0.4, seed=0,
+                           coalesce=DEFAULT_COALESCE)
+    pool_plan = plan_query(q, ds.items, pool, FAST,
+                           sample_frac=0.4, seed=0,
+                           coalesce=DEFAULT_COALESCE)
+    assert [("default/" + st.op_name, st.thr_hi, st.thr_lo, st.is_gold)
+            for st in bare_plan.stages] \
+        == [(st.op_name, st.thr_hi, st.thr_lo, st.is_gold)
+            for st in pool_plan.stages]
+    assert all(st.engine == "default" for st in pool_plan.stages)
+    assert all(st.engine == "" for st in bare_plan.stages)
+
+    for disp in DISPATCHERS:
+        ref = run_plan(bare_plan, q, ds.items, sess.backend,
+                       partition_size=30, dispatcher=disp)
+        got = run_plan(pool_plan, q, ds.items, pool,
+                       partition_size=30, dispatcher=disp)
+        np.testing.assert_array_equal(got.accepted, ref.accepted,
+                                      err_msg=disp)
+        for li in ref.map_values:
+            np.testing.assert_array_equal(got.map_values[li],
+                                          ref.map_values[li], err_msg=disp)
+        assert got.n_llm_tuples == ref.n_llm_tuples, disp
+        # same telemetry, same attribution (modulo the engine tag)
+        assert [(s.n_tuples, s.n_llm_calls, s.kv_bytes)
+                for s in got.stage_stats] \
+            == [(s.n_tuples, s.n_llm_calls, s.kv_bytes)
+                for s in ref.stage_stats], disp
+
+
+def test_flat_config_plans_identically_to_explicit_spec(single_world,
+                                                        tmp_path_factory,
+                                                        monkeypatch):
+    """The legacy-flat -> EngineSpec shim is a pure compilation step: an
+    explicit single-spec SessionConfig plans the same stages and decides
+    bit-identically to the flat form (same models, same ladder, same
+    unprefixed operator names)."""
+    import repro.runtime.executor as executor_mod
+    ds, flat_sess = single_world
+    monkeypatch.setattr(executor_mod, "time", _FakeClock())
+    spec = flat_sess.config.resolved_engines()[0]
+    explicit_sess = Session(SessionConfig(
+        engines=(EngineSpec(
+            "default", models=spec.models,
+            sm_ratios=spec.sm_ratios, lg_ratios=spec.lg_ratios,
+            include_cheap=spec.include_cheap,
+            profile_ratios=spec.profile_ratios,
+            prefill_batch=spec.prefill_batch,
+            memory_budget_bytes=spec.memory_budget_bytes,
+            max_batch=spec.max_batch, model_seed=spec.model_seed,
+            cache_dir=str(tmp_path_factory.mktemp("explicit"))),),
+        planner=FAST, sample_frac=0.4, partition_size=30))
+    try:
+        flat = _frame(flat_sess, ds)
+        explicit = _frame(explicit_sess, ds)
+        fp, ep = flat.plan(), explicit.plan()
+        # a single-spec session keeps the bare backend: identical stage
+        # lists, unprefixed names, no engine tags
+        assert [(st.op_name, st.thr_hi, st.thr_lo, st.is_gold, st.engine)
+                for st in fp.stages] \
+            == [(st.op_name, st.thr_hi, st.thr_lo, st.is_gold, st.engine)
+                for st in ep.stages]
+        fr = flat.execute()
+        er = explicit.execute()
+        np.testing.assert_array_equal(er.accepted, fr.accepted)
+        for li in fr.map_values:
+            np.testing.assert_array_equal(er.map_values[li],
+                                          fr.map_values[li])
+        # single-engine runs report one untagged engine bucket
+        assert set(stage_stats_by_engine(fr.stage_stats)) == {""}
+    finally:
+        explicit_sess.close()
