@@ -1,10 +1,42 @@
-"""Roofline table from the dry-run artifacts (results/dryrun_*)."""
+"""Roofline table from the dry-run artifacts (results/dryrun_*), plus
+analytic decode-attention bounds for the kernels perf gate."""
 from __future__ import annotations
 
 import glob
 import json
 import os
 from typing import Dict, List
+
+# Peak numbers the kernels perf gate measures against. Deliberately
+# conservative CPU-class defaults (the gate runs on CI CPU runners; the
+# TPU numbers come from the dry-run roofline artifacts) — overridable via
+# env so a TPU run can gate against HBM bandwidth instead.
+MEM_BW_GBS = float(os.environ.get("STRETTO_ROOFLINE_BW_GBS", "20.0"))
+PEAK_GFLOPS = float(os.environ.get("STRETTO_ROOFLINE_GFLOPS", "100.0"))
+
+
+def decode_bound_s(B: int, S: int, KV: int, G: int, dk: int, dv: int,
+                   n_q: int = 1, kv_bytes_per_elem: int = 4,
+                   scale_bytes: int = 0) -> Dict[str, float]:
+    """Analytic roofline bound (seconds per call) for (fused) flash-decode
+    over a cached context.
+
+    The kernel streams the whole K/V cache once per call regardless of
+    how many query tokens ride along — that is exactly why the fused
+    multi-token path wins over n_q sequential dispatches, and why int8
+    (kv_bytes_per_elem=1 + per-token scale_bytes) halves-plus the memory
+    time. FLOPs scale with n_q; bytes for q/out are negligible next to
+    the cache stream but included.
+    """
+    kv_bytes = B * S * KV * (dk + dv) * kv_bytes_per_elem
+    kv_bytes += B * S * KV * 2 * scale_bytes          # k_scale + v_scale
+    qo_bytes = B * n_q * KV * G * (dk + dv) * 4
+    flops = 2.0 * B * n_q * KV * G * S * (dk + dv)
+    mem_s = (kv_bytes + qo_bytes) / (MEM_BW_GBS * 1e9)
+    compute_s = flops / (PEAK_GFLOPS * 1e9)
+    return {"mem_s": mem_s, "compute_s": compute_s,
+            "bound_s": max(mem_s, compute_s),
+            "dominant": "memory" if mem_s >= compute_s else "compute"}
 
 
 def load(out_dir: str = "results/dryrun_sp") -> List[Dict]:

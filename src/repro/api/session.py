@@ -98,6 +98,21 @@ class EngineSpec:
                          candidates when the pool orders them (declare a
                          remote/expensive tier pricier without faking its
                          measured wall time)
+      kernels          — attention kernel backend for this engine's decode
+                         flushes: "auto" | "pallas" | "interpret" | "ref"
+                         (None: the STRETTO_KERNELS env var, read at flush
+                         time, defaulting to "auto")
+      fused            — feed the whole operator query through one fused
+                         attention dispatch per flush instead of a
+                         per-token scan (None: STRETTO_FUSED, default on)
+      device_cache     — keep loaded profile batches device-resident in an
+                         LRU bounded by memory_budget_bytes; repeat
+                         flushes skip reload + H2D copy and do NOT count
+                         kv_bytes (None: STRETTO_DEVICE_CACHE, default on)
+      sm_int8 / lg_int8 — compression ratios to ALSO store as int8
+                         quantized profiles; each becomes a distinct
+                         cascade candidate (operator suffix ``i8``) priced
+                         at the halved HBM traffic
     """
     name: str
     models: Tuple[str, ...] = ("sm", "lg")
@@ -112,10 +127,21 @@ class EngineSpec:
     model_seed: int = 1
     dispatcher: Optional[Any] = None
     cost_scale: float = 1.0
+    kernels: Optional[str] = None
+    fused: Optional[bool] = None
+    device_cache: Optional[bool] = None
+    sm_int8: Tuple[float, ...] = ()
+    lg_int8: Tuple[float, ...] = ()
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
             raise ValueError("EngineSpec.name must be a non-empty string")
+        if self.kernels is not None:
+            from repro.kernels.ops import VALID_BACKENDS
+            if self.kernels not in VALID_BACKENDS:
+                raise ValueError(
+                    f"engine {self.name!r}: kernels={self.kernels!r} is "
+                    f"not one of {VALID_BACKENDS}")
         if "/" in self.name:
             raise ValueError(
                 f"EngineSpec.name {self.name!r} must not contain '/' — it "
@@ -211,6 +237,13 @@ class SessionConfig:
     lg_ratios: Tuple[float, ...] = (0.8, 0.5, 0.3)
     include_cheap: bool = True
 
+    # kernel fast path (see EngineSpec for semantics)
+    kernels: Optional[str] = None
+    fused: Optional[bool] = None
+    device_cache: Optional[bool] = None
+    sm_int8: Tuple[float, ...] = ()
+    lg_int8: Tuple[float, ...] = ()
+
     engines: Optional[Tuple[EngineSpec, ...]] = None
     gold_engine: Optional[str] = None
 
@@ -258,7 +291,10 @@ class SessionConfig:
             profile_ratios=self.profile_ratios, cache_dir=self.cache_dir,
             prefill_batch=self.prefill_batch,
             memory_budget_bytes=self.memory_budget_bytes,
-            max_batch=self.max_batch, model_seed=self.model_seed),)
+            max_batch=self.max_batch, model_seed=self.model_seed,
+            kernels=self.kernels, fused=self.fused,
+            device_cache=self.device_cache,
+            sm_int8=tuple(self.sm_int8), lg_int8=tuple(self.lg_int8)),)
 
     def ladder(self) -> Tuple[float, ...]:
         """The compression ratios profiles are built at (gold 0.0 always
@@ -387,7 +423,8 @@ class Session:
             eng = ServingEngine(
                 CacheStore(cache_dir),
                 memory_budget_bytes=spec.memory_budget_bytes,
-                max_batch=spec.max_batch)
+                max_batch=spec.max_batch, kernels=spec.kernels,
+                fused=spec.fused, device_cache=spec.device_cache)
             for name in spec.models:
                 mcfg = planted_config(name)
                 eng.register_model(
@@ -471,12 +508,19 @@ class Session:
             if eng is None:
                 continue
             ladder = tuple(sorted({0.0, *(ratios or spec.ladder())}))
-            key = (spec.name, self._corpus_key(items), ladder)
+            key = (spec.name, self._corpus_key(items), ladder,
+                   tuple(spec.sm_int8), tuple(spec.lg_int8))
             if key in self._prepared:
                 continue
             for name in spec.models:
+                quant: set = set()
+                if name == spec.sm_model:
+                    quant |= set(spec.sm_int8)
+                if name == spec.lg_model:
+                    quant |= set(spec.lg_int8)
                 eng.build_profiles(name, items, ratios=list(ladder),
-                                   prefill_batch=spec.prefill_batch)
+                                   prefill_batch=spec.prefill_batch,
+                                   quant_ratios=sorted(quant))
             self._prepared.add(key)
 
     def _ensure_prepared(self, items: Sequence[Any]) -> None:
@@ -508,6 +552,7 @@ class Session:
             self.engines[name], sm=spec.sm_model, lg=spec.lg_model,
             sm_ratios=sm_ratios if sm_ratios is not None else spec.sm_ratios,
             lg_ratios=lg_ratios if lg_ratios is not None else spec.lg_ratios,
+            sm_int8=spec.sm_int8, lg_int8=spec.lg_int8,
             include_cheap=spec.include_cheap if include_cheap is None
             else include_cheap)
 

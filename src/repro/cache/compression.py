@@ -137,6 +137,30 @@ def compress_item_cache(cfg: ModelConfig, cache: Dict[str, Any],
     return out, keep
 
 
+def quantize_kv(arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """int8 rung of the compression ladder (gqa/hymba caches only).
+
+    Takes a compressed numpy cache dict with k/v of shape (L, S', KV, dh)
+    and returns int8 k/v plus per-(layer, token, head) absmax scales
+    (L, S', KV) float32 — the exact layout `init_cache(..., quant=True)`
+    uses and `_decode_kernel_int8` consumes. Dequantization is
+    x_int8 * scale, matching decode_step's on-the-fly quantization of
+    fresh query tokens, so stored context and new tokens share one
+    numeric scheme. Non-k/v entries (hymba conv/ssm states) pass through
+    untouched.
+    """
+    out = dict(arrays)
+    for key in ("k", "v"):
+        if key not in arrays:
+            continue
+        x = np.asarray(arrays[key], np.float32)           # (L, S', KV, dh)
+        scale = np.max(np.abs(x), axis=-1) / 127.0        # (L, S', KV)
+        q = np.round(x / np.maximum(scale, 1e-9)[..., None]).astype(np.int8)
+        out[key] = q
+        out[f"{key}_scale"] = scale.astype(np.float32)
+    return out
+
+
 def _add_states(cfg: ModelConfig, cache, out):
     """Hymba carries O(1) SSM/conv states alongside the compressible
     attention cache; they are copied through untouched."""

@@ -1,10 +1,16 @@
 """On-disk KV-cache repository (paper §5, Fig. 4).
 
-One *profile* = (model_name, compression ratio). The store holds one
-compressed cache per (profile, item) as an .npz shard, written once in the
-offline phase and memory-mapped at query time. `load_batch` re-pads a set
-of items to the max compressed length in the batch — the paper's batching
-scheme — and returns a decode-ready cache pytree.
+One *profile* = (model_name, compression ratio, optional int8
+quantization). The store holds one compressed cache per (profile, item)
+as an .npz shard, written once in the offline phase and memory-mapped at
+query time. `load_batch` re-pads a set of items to the max compressed
+length in the batch — the paper's batching scheme — and returns a
+decode-ready cache pytree.
+
+Alongside the shards, each profile directory carries an append-only
+`_meta.jsonl` recording per-item byte sizes at `save` time, so batch
+sizing (`ServingEngine.max_batch_for`) reads one small line instead of
+decompressing a full .npz shard per flush.
 """
 from __future__ import annotations
 
@@ -19,15 +25,19 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 
+META_FILE = "_meta.jsonl"
+
 
 @dataclass(frozen=True)
 class Profile:
     model_name: str
     ratio: float
+    quant: bool = False
 
     @property
     def tag(self) -> str:
-        return f"{self.model_name}__r{int(round(self.ratio * 100)):02d}"
+        base = f"{self.model_name}__r{int(round(self.ratio * 100)):02d}"
+        return base + ("__q8" if self.quant else "")
 
 
 class CacheStore:
@@ -35,6 +45,8 @@ class CacheStore:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._mem: Dict[Tuple[str, int], Dict[str, np.ndarray]] = {}
+        # per-profile {item_id: nbytes}, mirrored in _meta.jsonl on disk
+        self._meta: Dict[str, Dict[int, int]] = {}
         # monotonic telemetry: bytes of cached KV arrays handed to decode
         # batches. The global counter is the store-wide total; the
         # thread-local twin counts only bytes loaded by the calling thread,
@@ -55,15 +67,60 @@ class CacheStore:
         d = os.path.join(self.root, profile.tag)
         return os.path.join(d, f"{item_id}.npz")
 
+    def _meta_path(self, profile: Profile) -> str:
+        return os.path.join(self.root, profile.tag, META_FILE)
+
     def save(self, profile: Profile, item_id: int,
              arrays: Dict[str, np.ndarray], length: int):
         path = self._path(profile, item_id)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        np.savez(path, __length__=np.int32(length),
-                 **{k: np.asarray(v) for k, v in arrays.items()})
+        arrs = {k: np.asarray(v) for k, v in arrays.items()}
+        np.savez(path, __length__=np.int32(length), **arrs)
         self._mem[(profile.tag, item_id)] = {
-            "__length__": np.int32(length),
-            **{k: np.asarray(v) for k, v in arrays.items()}}
+            "__length__": np.int32(length), **arrs}
+        nbytes = sum(a.nbytes for a in arrs.values())
+        with open(self._meta_path(profile), "a") as f:
+            f.write(json.dumps({"id": item_id, "nbytes": nbytes,
+                                "length": int(length)}) + "\n")
+        self._meta.setdefault(profile.tag, {})[item_id] = nbytes
+
+    def _load_meta(self, profile: Profile) -> Dict[int, int]:
+        """Per-item nbytes for a profile; last write wins (append-only)."""
+        if profile.tag not in self._meta:
+            meta: Dict[int, int] = {}
+            p = self._meta_path(profile)
+            if os.path.exists(p):
+                with open(p) as f:
+                    for line in f:
+                        line = line.strip()
+                        if not line:
+                            continue
+                        rec = json.loads(line)
+                        meta[int(rec["id"])] = int(rec["nbytes"])
+            self._meta[profile.tag] = meta
+        return self._meta[profile.tag]
+
+    def item_nbytes(self, profile: Profile,
+                    item_id: Optional[int] = None) -> Optional[int]:
+        """Cache bytes for one stored item (any item if id is None),
+        served from profile metadata — no shard decompression. Falls back
+        to loading the shard for stores written before metadata existed."""
+        meta = self._load_meta(profile)
+        if item_id is None:
+            if meta:
+                return next(iter(meta.values()))
+            item_id = self.any_item_id(profile)
+            if item_id is None:
+                return None
+        if item_id in meta:
+            return meta[item_id]
+        if not self.has(profile, item_id):
+            return None
+        shard = self.load(profile, item_id)
+        nbytes = sum(a.nbytes for k, a in shard.items()
+                     if k != "__length__")
+        meta[item_id] = nbytes
+        return nbytes
 
     def load(self, profile: Profile, item_id: int) -> Dict[str, np.ndarray]:
         key = (profile.tag, item_id)
@@ -94,7 +151,7 @@ class CacheStore:
         if not os.path.isdir(d):
             return 0
         return sum(os.path.getsize(os.path.join(d, f))
-                   for f in os.listdir(d))
+                   for f in os.listdir(d) if f.endswith(".npz"))
 
     def load_batch(self, cfg: ModelConfig, profile: Profile,
                    item_ids: Sequence[int], pad_to_multiple: int = 32,
@@ -105,7 +162,10 @@ class CacheStore:
         Returns (cache pytree with leaves (L, B, S_max, ...) + 'lengths',
         lengths array). Padding to the max compressed length in the batch
         is the paper's execution-time batching scheme. `headroom` reserves
-        slots for the operator query + generated tokens.
+        slots for the operator query + generated tokens. For quantized
+        profiles the shards carry int8 k/v plus (L, S', KV) float32
+        scales; scales pad along S like the caches so the decode kernel's
+        grid stays aligned.
 
         `n_real` bounds the bytes-loaded telemetry to the first n_real
         entries: callers that replicate an item to round the batch up to
@@ -126,7 +186,7 @@ class CacheStore:
         smax = ((smax + pad_to_multiple - 1) // pad_to_multiple
                 * pad_to_multiple)
         cache: Dict[str, Any] = {}
-        seq_keys = {"k", "v", "c_kv", "k_rope"}
+        seq_keys = {"k", "v", "c_kv", "k_rope", "k_scale", "v_scale"}
         for key in shards[0]:
             if key == "__length__":
                 continue

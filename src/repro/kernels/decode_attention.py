@@ -1,13 +1,26 @@
-"""Pallas TPU flash-decode kernel over (compressed) KV caches.
+"""Pallas TPU flash-decode kernels over (compressed) KV caches.
 
-The hot loop of Stretto's KV-cache-enabled operators: one query token per
-item attends to a precomputed, possibly compressed, right-padded cache.
+The hot loop of Stretto's KV-cache-enabled operators: query tokens per
+item attend to a precomputed, possibly compressed, right-padded cache.
 
-  q        (B, KV, G, dk)    query heads, grouped GQA layout
+Two entry points share the online-softmax machinery:
+
+  decode_attention        one query token per item (classic flash-decode)
+  decode_query_attention  Lq query tokens per item in ONE dispatch — the
+                          fused operator-query path: the serving engine
+                          feeds the whole fixed query token list at once
+                          instead of scanning tokens one at a time
+
+  q        (B, KV, G, dk) / (B, Lq, KV, G, dk)   grouped GQA layout
   k_cache  (B, S, KV, dk)
   v_cache  (B, S, KV, dv)    dv may differ from dk (absorbed MLA: dv = r)
   lengths  (B,) int32        valid prefix per item (compressed lengths)
-  window   int (static)      sliding-window size; GLOBAL = full
+  window   int or traced int32 scalar; GLOBAL = full attention
+
+`window` is carried as a (1,) int32 *input* (not a static closure
+constant): the model's per-layer window is data in the layer scan
+(gemma3's local:global pattern), so the kernel must accept a traced
+value without retracing per layer.
 
 Grid (B, KV, S/block_s): the KV-length axis iterates innermost and
 sequentially on TPU, so the online-softmax state (m, l, acc) lives in VMEM
@@ -17,7 +30,9 @@ split-K scheme. K/V tiles stream HBM->VMEM via BlockSpec; the (G, dk) x
 run on the MXU with dk, dv in {64, 128, 256+} and block_s a multiple of 128.
 
 Per-item `lengths` masking makes padded batches exact — this is what lets
-the serving engine batch caches of different compressed lengths.
+the serving engine batch caches of different compressed lengths. int8
+variants take per-(token, head) scales (B, S, KV) and dequantize
+in-register after the VMEM load, so HBM streams 1 byte/element.
 """
 from __future__ import annotations
 
@@ -29,11 +44,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+GLOBAL = 1 << 30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+def _window_arg(window) -> jax.Array:
+    """Normalize the window kwarg (python int or traced scalar) to the
+    (1,) int32 kernel input."""
+    return jnp.asarray(window, jnp.int32).reshape(1)
+
+
+# ---------------------------------------------------------------------------
+# single-query flash-decode
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *, block_s: int, n_s: int,
-                   window: int, scale: float):
+                   scale: float):
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
@@ -45,13 +71,13 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, dk)
     k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, dk)
     v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, dv)
-    _decode_core(len_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
-                 block_s=block_s, n_s=n_s, window=window, s_idx=s_idx)
+    _decode_core(len_ref, win_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                 block_s=block_s, n_s=n_s, s_idx=s_idx)
 
 
-def _decode_kernel_int8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
-                        o_ref, m_ref, l_ref, acc_ref, *, block_s: int,
-                        n_s: int, window: int, scale: float):
+def _decode_kernel_int8(len_ref, win_ref, q_ref, k_ref, v_ref, ks_ref,
+                        vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        block_s: int, n_s: int, scale: float):
     """int8 KV variant: dequantization happens in-register after the VMEM
     load, so HBM traffic is 1 byte/element + per-token scales (the
     beyond-paper optimization measured in EXPERIMENTS §Perf)."""
@@ -68,16 +94,17 @@ def _decode_kernel_int8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
     vs = vs_ref[0, :, 0].astype(jnp.float32)
     k = k_ref[0, :, 0].astype(jnp.float32) * ks[:, None]
     v = v_ref[0, :, 0].astype(jnp.float32) * vs[:, None]
-    _decode_core(len_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
-                 block_s=block_s, n_s=n_s, window=window, s_idx=s_idx)
+    _decode_core(len_ref, win_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                 block_s=block_s, n_s=n_s, s_idx=s_idx)
 
 
-def _decode_core(len_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
-                 block_s: int, n_s: int, window: int, s_idx):
+def _decode_core(len_ref, win_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                 block_s: int, n_s: int, s_idx):
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, bs)
-    length = len_ref[0]  # noqa: E741
+    length = len_ref[0]
+    window = win_ref[0]
     pos = s_idx * block_s + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_s), 1)
     mask = (pos < length) & ((length - 1 - pos) < window)
@@ -100,7 +127,7 @@ def _decode_core(len_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     lengths: jax.Array, *, window: int = 1 << 30,
+                     lengths: jax.Array, *, window=GLOBAL,
                      block_s: int = 128, interpret: bool = False,
                      k_scale: jax.Array = None, v_scale: jax.Array = None
                      ) -> jax.Array:
@@ -119,35 +146,169 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
     in_specs = [
         pl.BlockSpec((1,), lambda b, h, s: (b,)),
+        pl.BlockSpec((1,), lambda b, h, s: (0,)),
         pl.BlockSpec((1, 1, G, dk), lambda b, h, s: (b, h, 0, 0)),
         pl.BlockSpec((1, block_s, 1, dk), lambda b, h, s: (b, s, h, 0)),
         pl.BlockSpec((1, block_s, 1, dv), lambda b, h, s: (b, s, h, 0)),
     ]
-    args = [lengths, q, k_cache, v_cache]
+    args = [lengths, _window_arg(window), q, k_cache, v_cache]
     if quant:
         kern = functools.partial(_decode_kernel_int8, block_s=block_s,
-                                 n_s=n_s, window=window, scale=scale)
+                                 n_s=n_s, scale=scale)
         in_specs += [
             pl.BlockSpec((1, block_s, 1), lambda b, h, s: (b, s, h)),
             pl.BlockSpec((1, block_s, 1), lambda b, h, s: (b, s, h)),
         ]
         args += [k_scale, v_scale]
-        out_dtype = jnp.bfloat16
     else:
         kern = functools.partial(_decode_kernel, block_s=block_s, n_s=n_s,
-                                 window=window, scale=scale)
-        out_dtype = q.dtype
+                                 scale=scale)
     return pl.pallas_call(
         kern,
         grid=(B, KV, n_s),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, dv), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, dv),
-                                       q.dtype if not quant else out_dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dv), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-token query decode
+# ---------------------------------------------------------------------------
+
+def _query_kernel(len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, block_s: int, n_s: int,
+                  n_q: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32) * scale       # (Lq, G, dk)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, dk)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, dv)
+    _query_core(len_ref, win_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                block_s=block_s, n_s=n_s, n_q=n_q, s_idx=s_idx)
+
+
+def _query_kernel_int8(len_ref, win_ref, q_ref, k_ref, v_ref, ks_ref,
+                       vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                       block_s: int, n_s: int, n_q: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32) * scale
+    ks = ks_ref[0, :, 0].astype(jnp.float32)
+    vs = vs_ref[0, :, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks[:, None]
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs[:, None]
+    _query_core(len_ref, win_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                block_s=block_s, n_s=n_s, n_q=n_q, s_idx=s_idx)
+
+
+def _query_core(len_ref, win_ref, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                block_s: int, n_s: int, n_q: int, s_idx):
+    lq, G, dk = q.shape
+    q2 = q.reshape(lq * G, dk)
+    s = jax.lax.dot_general(q2, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(lq, G, block_s)                         # (Lq, G, bs)
+    length = len_ref[0]
+    window = win_ref[0]
+    # query i sits at absolute position length - n_q + i; causal masking
+    # against the cache positions keeps the fused pass equivalent to the
+    # sequential per-token scan (token i never sees tokens > i)
+    k_pos = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_s), 2)
+    q_pos = length - n_q + jax.lax.broadcasted_iota(
+        jnp.int32, (lq, 1, 1), 0)
+    mask = (k_pos <= q_pos) & ((q_pos - k_pos) < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (Lq, G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.reshape(lq * G, block_s), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(lq, G, -1)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+def decode_query_attention(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, lengths: jax.Array, *,
+                           window=GLOBAL, block_s: int = 128,
+                           interpret: bool = False,
+                           k_scale: jax.Array = None,
+                           v_scale: jax.Array = None) -> jax.Array:
+    """Fused multi-token query flash-decode. Returns (B, Lq, KV, G, dv).
+
+    q: (B, Lq, KV, G, dk). `lengths` counts ALL valid tokens *including*
+    the Lq query tokens (the cache already holds their k/v): query i's
+    absolute position is lengths - Lq + i, and masking is causal per
+    query token — one kernel dispatch replaces Lq sequential decode
+    dispatches. With k_scale/v_scale (B, S, KV), the cache is int8 and
+    dequantized in-register."""
+    B, Lq, KV, G, dk = q.shape
+    _, S, _, dv = v_cache.shape
+    block_s = min(block_s, S)
+    if S % block_s:
+        raise ValueError(f"S={S} must be a multiple of block_s={block_s}")
+    n_s = S // block_s
+    scale = dk ** -0.5
+    quant = k_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, s: (b,)),
+        pl.BlockSpec((1,), lambda b, h, s: (0,)),
+        pl.BlockSpec((1, Lq, 1, G, dk), lambda b, h, s: (b, 0, h, 0, 0)),
+        pl.BlockSpec((1, block_s, 1, dk), lambda b, h, s: (b, s, h, 0)),
+        pl.BlockSpec((1, block_s, 1, dv), lambda b, h, s: (b, s, h, 0)),
+    ]
+    args = [lengths, _window_arg(window), q, k_cache, v_cache]
+    if quant:
+        kern = functools.partial(_query_kernel_int8, block_s=block_s,
+                                 n_s=n_s, n_q=Lq, scale=scale)
+        in_specs += [
+            pl.BlockSpec((1, block_s, 1), lambda b, h, s: (b, s, h)),
+            pl.BlockSpec((1, block_s, 1), lambda b, h, s: (b, s, h)),
+        ]
+        args += [k_scale, v_scale]
+    else:
+        kern = functools.partial(_query_kernel, block_s=block_s, n_s=n_s,
+                                 n_q=Lq, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, KV, n_s),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Lq, 1, G, dv),
+                               lambda b, h, s: (b, 0, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Lq, KV, G, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Lq, G, 1), jnp.float32),
+            pltpu.VMEM((Lq, G, 1), jnp.float32),
+            pltpu.VMEM((Lq, G, dv), jnp.float32),
         ],
         interpret=interpret,
     )(*args)

@@ -23,6 +23,28 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, *,
     return out.astype(q.dtype)
 
 
+def decode_query_attention_ref(q, k_cache, v_cache, lengths, *,
+                               window: int = GLOBAL):
+    """Fused multi-token query decode oracle.
+
+    q: (B, Lq, KV, G, dk); k: (B, S, KV, dk); v: (B, S, KV, dv);
+    lengths: (B,) counts all valid tokens INCLUDING the Lq query tokens
+    (their k/v are already in the cache). Query i sits at absolute
+    position lengths - Lq + i and attends causally within `window`.
+    Returns (B, Lq, KV, G, dv)."""
+    B, Lq, KV, G, dk = q.shape
+    S = k_cache.shape[1]
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    s = jnp.einsum("blhgd,bshd->blhgs", qf, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(S)[None, None, :]
+    q_pos = (lengths[:, None] - Lq + jnp.arange(Lq)[None, :])[:, :, None]
+    mask = (k_pos <= q_pos) & ((q_pos - k_pos) < window)
+    s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("blhgs,bshd->blhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def prefill_attention_ref(q, k, v, *, window: int = GLOBAL,
                           causal: bool = True):
     """q: (B, S, KV, G, dk); k: (B, S, KV, dk); v: (B, S, KV, dv)."""

@@ -1,6 +1,8 @@
 from repro.models.transformer import (build_window_array, cache_axes,
-                                      decode_step, forward, init_cache,
-                                      init_params, param_axes, prefill)
+                                      decode_multi, decode_step, forward,
+                                      init_cache, init_params, param_axes,
+                                      prefill, supports_fused_decode)
 
 __all__ = ["init_params", "param_axes", "forward", "prefill", "decode_step",
-           "init_cache", "cache_axes", "build_window_array"]
+           "decode_multi", "supports_fused_decode", "init_cache",
+           "cache_axes", "build_window_array"]

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as KOPS
 
 GLOBAL_WINDOW = 1 << 30   # sentinel: effectively unbounded window
 
@@ -134,27 +135,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out
 
 
-def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                         lengths: jax.Array, window: jax.Array) -> jax.Array:
-    """Single-token attention against a (compressed) cache.
-
-    q: (B, H, dh); k_cache/v_cache: (B, S, KV, dh); lengths: (B,) valid length.
-    Window masking is relative to the *last* position (lengths - 1).
-    """
-    B, H, dh = q.shape
-    _, S, KV, _ = k_cache.shape
-    G = H // KV
-    qg = q.reshape(B, KV, G, dh).astype(jnp.float32) * (dh ** -0.5)
-    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
-    pos = jnp.arange(S)[None, :]
-    q_pos = (lengths - 1)[:, None]
-    mask = (pos < lengths[:, None]) & (q_pos - pos < window)
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(B, H, dh).astype(k_cache.dtype)
-
-
 # ---------------------------------------------------------------------------
 # GQA attention layer (granite / gemma3 / minitron / llava / musicgen / dbrx)
 # ---------------------------------------------------------------------------
@@ -181,15 +161,43 @@ def gqa_attn_full(p, x, cfg: ModelConfig, window, positions):
 
 
 def gqa_attn_decode(p, x, cfg: ModelConfig, window, cache_k, cache_v,
-                    lengths):
+                    lengths, *, kernels=None, k_scale=None, v_scale=None):
     """x: (B, 1, d). cache_[kv]: (B, S, KV, dh) already containing this step's
-    k/v at position lengths-1 (the caller updates the cache first)."""
+    k/v at position lengths-1 (the caller updates the cache first).
+
+    Routed through kernels.ops.decode_attention: `kernels` selects the
+    attention backend (auto/pallas/interpret/ref; None defers to
+    STRETTO_KERNELS). int8 caches pass their per-token scales through and
+    are dequantized inside the kernel."""
     B = x.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     positions = (lengths - 1)[:, None]
-    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+    q = (x @ p["wq"]).reshape(B, 1, H, dh)
     q = apply_rope(q, positions, cfg.rope_theta)[:, 0]
-    out = decode_attention_jnp(q, cache_k, cache_v, lengths, window)
-    return out.reshape(B, 1, cfg.n_heads * cfg.d_head) @ p["wo"]
+    q = q.reshape(B, KV, H // KV, dh)
+    out = KOPS.decode_attention(q, cache_k, cache_v, lengths, window=window,
+                                backend=kernels, k_scale=k_scale,
+                                v_scale=v_scale)
+    return out.reshape(B, 1, H * dh) @ p["wo"]
+
+
+def gqa_attn_decode_multi(p, x, cfg: ModelConfig, window, cache_k, cache_v,
+                          lengths, *, kernels=None, k_scale=None,
+                          v_scale=None):
+    """Fused multi-token decode: x: (B, Lq, d), one attention dispatch for
+    all Lq query tokens. cache_[kv] already contains the Lq new k/v
+    (positions lengths-Lq .. lengths-1); masking inside the kernel is
+    causal per query token, so this matches the sequential scan."""
+    B, Lq, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    positions = lengths[:, None] - Lq + jnp.arange(Lq)[None, :]
+    q = (x @ p["wq"]).reshape(B, Lq, H, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    q = q.reshape(B, Lq, KV, H // KV, dh)
+    out = KOPS.decode_query_attention(q, cache_k, cache_v, lengths,
+                                      window=window, backend=kernels,
+                                      k_scale=k_scale, v_scale=v_scale)
+    return out.reshape(B, Lq, H * dh) @ p["wo"]
 
 
 def gqa_new_kv(p, x, cfg: ModelConfig, lengths):
@@ -198,6 +206,16 @@ def gqa_new_kv(p, x, cfg: ModelConfig, lengths):
     positions = (lengths - 1)[:, None]
     k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
     v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def gqa_new_kv_multi(p, x, cfg: ModelConfig, positions):
+    """Project Lq steps' k/v for bulk cache insertion. x: (B, Lq, d),
+    positions: (B, Lq) absolute positions of the query tokens."""
+    B, Lq, _ = x.shape
+    k = (x @ p["wk"]).reshape(B, Lq, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, Lq, cfg.n_kv_heads, cfg.d_head)
     k = apply_rope(k, positions, cfg.rope_theta)
     return k, v
 
@@ -488,9 +506,9 @@ def hymba_mix_full(p, x, cfg: ModelConfig, window, positions):
 
 
 def hymba_mix_decode(p, x, cfg: ModelConfig, window, cache_k, cache_v,
-                     lengths, conv_state, ssm_state):
+                     lengths, conv_state, ssm_state, *, kernels=None):
     attn_out = gqa_attn_decode(p["attn"], x, cfg, window, cache_k, cache_v,
-                               lengths)
+                               lengths, kernels=kernels)
     ssm_out, new_conv, new_ssm = mamba_mix_step(p["ssm"], x, cfg,
                                                 conv_state, ssm_state)
     out = 0.5 * (rms_norm(attn_out, p["norm_attn"], cfg.norm_eps)

@@ -433,11 +433,12 @@ def _insert_seq(buf, new, pos, uniform: bool):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
-                uniform_pos: bool = False):
+                uniform_pos: bool = False, kernels=None):
     """One decode step. tokens: (B, 1) int32 (or embeds (B, 1, d)).
 
     Returns (logits (B, V), new_cache). The new token sits at position
-    cache["lengths"]; lengths are incremented.
+    cache["lengths"]; lengths are incremented. `kernels` selects the
+    attention backend (None defers to STRETTO_KERNELS).
     """
     pos = cache["lengths"]                        # (B,)
     new_len = pos + 1
@@ -468,23 +469,32 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
                                                uniform_pos)
                 new_c["v_scale"] = _insert_seq(c["v_scale"], vs, pos,
                                                uniform_pos)
-                k_att = (new_c["k"].astype(jnp.bfloat16)
-                         * new_c["k_scale"][..., None].astype(jnp.bfloat16))
-                v_att = (new_c["v"].astype(jnp.bfloat16)
-                         * new_c["v_scale"][..., None].astype(jnp.bfloat16))
+                k_att, v_att = new_c["k"], new_c["v"]
+                k_sc, v_sc = new_c["k_scale"], new_c["v_scale"]
             else:
                 new_c["k"] = _insert_seq(c["k"], k_new.astype(c["k"].dtype),
                                          pos, uniform_pos)
                 new_c["v"] = _insert_seq(c["v"], v_new.astype(c["v"].dtype),
                                          pos, uniform_pos)
                 k_att, v_att = new_c["k"], new_c["v"]
+                k_sc = v_sc = None
             if cfg.attn_kind == "gqa":
+                # int8 caches flow through with their scales; the kernel
+                # (or the ref oracle) dequantizes
                 attn_out = L.gqa_attn_decode(p["attn"], h, cfg, window,
-                                             k_att, v_att, new_len)
+                                             k_att, v_att, new_len,
+                                             kernels=kernels,
+                                             k_scale=k_sc, v_scale=v_sc)
             else:
+                if quant:
+                    # hymba's mixer is not int8-aware; dequantize up front
+                    k_att = (k_att.astype(jnp.bfloat16)
+                             * k_sc[..., None].astype(jnp.bfloat16))
+                    v_att = (v_att.astype(jnp.bfloat16)
+                             * v_sc[..., None].astype(jnp.bfloat16))
                 attn_out, new_conv, new_ssm = L.hymba_mix_decode(
                     p["attn"], h, cfg, window, k_att, v_att,
-                    new_len, c["conv"], c["ssm"])
+                    new_len, c["conv"], c["ssm"], kernels=kernels)
                 new_c["conv"] = new_conv.astype(c["conv"].dtype)
                 new_c["ssm"] = new_ssm
         elif cfg.attn_kind == "mla":
@@ -524,6 +534,82 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     logits = (x @ head)[:, 0]
+    new_cache = dict(new_scan_cache)
+    new_cache["lengths"] = new_len
+    return logits, new_cache
+
+
+def supports_fused_decode(cfg: ModelConfig) -> bool:
+    """Fused multi-token decode covers pure-attention caches only; mixer
+    archs (hymba/mamba/rwkv) carry sequential recurrent state."""
+    return cfg.attn_kind == "gqa"
+
+
+def decode_multi(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
+                 kernels=None):
+    """Fused multi-token decode: feed all Lq query tokens in ONE forward
+    pass — one attention dispatch per layer instead of Lq sequential
+    decode_step scans. tokens: (B, Lq) int32 (or embeds (B, Lq, d)).
+
+    Returns (logits (B, V) for the LAST query token, new_cache). All Lq
+    k/v land in the cache at positions lengths .. lengths+Lq-1 and
+    attention is causally masked per query token inside the kernel, so
+    the logits match the sequential scan (up to float reassociation).
+    GQA-only; see supports_fused_decode.
+    """
+    if not supports_fused_decode(cfg):
+        raise ValueError(
+            f"decode_multi supports attn_kind='gqa' only, got "
+            f"{cfg.attn_kind!r}")
+    pos0 = cache["lengths"]                       # (B,)
+    x = _embed(params, cfg, tokens, embeds)       # (B, Lq, d)
+    B, Lq, _ = x.shape
+    new_len = pos0 + Lq
+    positions = pos0[:, None] + jnp.arange(Lq)[None, :]
+    bidx = jnp.arange(B)[:, None]
+    windows = jnp.asarray(build_window_array(cfg))
+
+    scan_cache = {k: v for k, v in cache.items() if k != "lengths"}
+
+    def body(x, scanned):
+        p, window, c = scanned
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        new_c = dict(c)
+        k_new, v_new = L.gqa_new_kv_multi(p["attn"], h, cfg, positions)
+        quant = "k_scale" in c
+        if quant:
+            ks = jnp.max(jnp.abs(k_new.astype(jnp.float32)), -1) / 127.0
+            vs = jnp.max(jnp.abs(v_new.astype(jnp.float32)), -1) / 127.0
+            k_q = jnp.round(k_new / jnp.maximum(ks, 1e-9)[..., None]
+                            ).astype(jnp.int8)
+            v_q = jnp.round(v_new / jnp.maximum(vs, 1e-9)[..., None]
+                            ).astype(jnp.int8)
+            new_c["k"] = c["k"].at[bidx, positions].set(k_q)
+            new_c["v"] = c["v"].at[bidx, positions].set(v_q)
+            new_c["k_scale"] = c["k_scale"].at[bidx, positions].set(ks)
+            new_c["v_scale"] = c["v_scale"].at[bidx, positions].set(vs)
+            k_sc, v_sc = new_c["k_scale"], new_c["v_scale"]
+        else:
+            new_c["k"] = c["k"].at[bidx, positions].set(
+                k_new.astype(c["k"].dtype))
+            new_c["v"] = c["v"].at[bidx, positions].set(
+                v_new.astype(c["v"].dtype))
+            k_sc = v_sc = None
+        attn_out = L.gqa_attn_decode_multi(
+            p["attn"], h, cfg, window, new_c["k"], new_c["v"], new_len,
+            kernels=kernels, k_scale=k_sc, v_scale=v_sc)
+        x = x + attn_out
+        h2 = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        mlp_out = (L.moe_mlp(p["mlp"], h2, cfg) if cfg.is_moe
+                   else L.swiglu_mlp(p["mlp"], h2))
+        x = x + mlp_out
+        return x, new_c
+
+    x, new_scan_cache = lax.scan(body, x, (params["layers"], windows,
+                                           scan_cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head)[:, -1]
     new_cache = dict(new_scan_cache)
     new_cache["lengths"] = new_len
     return logits, new_cache

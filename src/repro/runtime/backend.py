@@ -140,11 +140,12 @@ class KVCacheBackend(RegistryBackend):
 
     def __init__(self, engine, *, sm: str = "sm", lg: str = "lg",
                  sm_ratios=(0.8, 0.5, 0.0), lg_ratios=(0.8, 0.5, 0.3),
-                 include_cheap: bool = True):
+                 sm_int8=(), lg_int8=(), include_cheap: bool = True):
         from repro.serving.operators import make_registry
         self.engine = engine
         super().__init__(make_registry(
             engine, sm=sm, lg=lg, sm_ratios=sm_ratios, lg_ratios=lg_ratios,
+            sm_int8=sm_int8, lg_int8=lg_int8,
             include_cheap=include_cheap))
 
     def kv_bytes_loaded(self) -> int:

@@ -2,12 +2,26 @@
 
 Offline: `build_profiles` prefetches every corpus item through each model
 once, compresses the KV cache at each ladder ratio (Expected Attention),
-and persists the profiles in the CacheStore.
+optionally quantizes rungs to int8, and persists the profiles in the
+CacheStore.
 
 Online: `run_filter` / `run_map` load a profile's caches for a batch of
 items, pad to the max compressed length, *skip prefill entirely*, feed the
-operator query tokens through decode steps, and read out answer-token
+operator query tokens through the decode path, and read out answer-token
 log-odds ('1' vs '0') or a greedy value token + confidence margin.
+
+The decode path is the Pallas fast path:
+  - the attention backend is selectable (`kernels` ctor arg, else the
+    STRETTO_KERNELS env var: auto | pallas | interpret | ref);
+  - by default the operator query is fed through ONE fused multi-token
+    attention dispatch per flush (`decode_multi`) instead of a per-token
+    lax.scan (`fused` ctor arg, else STRETTO_FUSED; scan remains the
+    fallback for archs with recurrent state);
+  - repeated flushes against the same (profile, batch) skip the
+    npz-reload + re-pad + H2D copy via a device-resident LRU cache
+    bounded by `memory_budget_bytes` (`device_cache` ctor arg, else
+    STRETTO_DEVICE_CACHE). Device-cache hits do NOT increment the
+    kv_bytes telemetry — it counts real loads only.
 
 Batch size is memory-bounded: higher compression -> smaller caches ->
 larger batches -> fewer calls (the paper's batching speedup mechanism).
@@ -15,7 +29,10 @@ larger batches -> fewer calls (the paper's batching speedup mechanism).
 from __future__ import annotations
 
 import math
+import os
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -24,10 +41,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.compression import (QueryStats, calibrate_query_stats,
-                                     compress_item_cache)
+                                     compress_item_cache, quantize_kv)
 from repro.cache.store import CacheStore, Profile
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_cache, prefill
+from repro.kernels import ops as KOPS
+from repro.models import (decode_multi, decode_step, init_cache, prefill,
+                          supports_fused_decode)
+
+# Engine loads pad the cache length to a multiple of the Pallas block so
+# the kernel grid is always legal (S % block_s == 0), whichever backend
+# ends up selected. Padded positions are masked exactly, and kv_bytes
+# counts pre-padding bytes, so this changes neither results nor telemetry.
+KERNEL_BLOCK_S = 128
+
+
+def _env_flag(name: str, default: bool = True) -> bool:
+    v = os.environ.get(name)
+    if v is None or v == "":
+        return default
+    return v not in ("0", "false", "False", "no")
 
 
 @dataclass
@@ -42,12 +74,37 @@ class ServingEngine:
 
     def __init__(self, store: CacheStore,
                  memory_budget_bytes: float = 2e9,
-                 max_batch: int = 128):
+                 max_batch: int = 128,
+                 kernels: Optional[str] = None,
+                 fused: Optional[bool] = None,
+                 device_cache: Optional[bool] = None):
         self.store = store
         self.models: Dict[str, EngineModel] = {}
         self.memory_budget = memory_budget_bytes
         self.max_batch = max_batch
-        self._decode_jit: Dict[str, Any] = {}
+        # attention backend: explicit arg > STRETTO_KERNELS env > auto.
+        # Validated (and env read) at flush time, not here, so tests can
+        # flip the env var between flushes.
+        self.kernels = kernels
+        self.fused = (_env_flag("STRETTO_FUSED") if fused is None
+                      else bool(fused))
+        self.device_cache = (_env_flag("STRETTO_DEVICE_CACHE")
+                             if device_cache is None else bool(device_cache))
+        self._decode_jit: Dict[Tuple[str, bool, str], Any] = {}
+        # device-resident profile cache: (profile.tag, ids, headroom) ->
+        # (cache pytree on device, nbytes). One lock serializes
+        # lookup-or-load so concurrent flushes of the same key load once
+        # and total kv_bytes stays schedule-independent.
+        self._dev_cache: "OrderedDict[Tuple, Tuple[Dict[str, Any], int]]" \
+            = OrderedDict()
+        self._dev_bytes = 0
+        self._dev_lock = threading.Lock()
+        self.dev_cache_hits = 0
+        self.dev_cache_misses = 0
+        # telemetry for the fused-path acceptance hook: number of
+        # attention decode dispatches issued (1 per fused flush,
+        # len(query) per scan flush)
+        self.attn_dispatches = 0
 
     # ---------------- offline phase ----------------
 
@@ -55,11 +112,22 @@ class ServingEngine:
         self.models[name] = EngineModel(cfg, params)
 
     def build_profiles(self, model_name: str, items: Sequence[Any],
-                       ratios: Sequence[float], prefill_batch: int = 16):
-        """Prefill every item once, compress at every ratio, persist."""
+                       ratios: Sequence[float], prefill_batch: int = 16,
+                       quant_ratios: Sequence[float] = ()):
+        """Prefill every item once, compress at every ratio, persist.
+
+        `quant_ratios` adds int8 rungs: the cache is compressed at the
+        given ratio and then quantized to int8 with per-token scales
+        (halved HBM traffic at decode time), stored under a distinct
+        quant profile tag.
+        """
         em = self.models[model_name]
         cfg = em.cfg
         has_cache = cfg.attn_kind != "rwkv6"
+        if quant_ratios and cfg.attn_kind not in ("gqa", "hymba"):
+            raise ValueError(
+                f"int8 KV profiles require a k/v cache; "
+                f"attn_kind={cfg.attn_kind!r} has none")
         # calibration on the first few items
         if has_cache and em.stats is None:
             calib = _pad_tokens([it.tokens for it in items[:8]])
@@ -86,110 +154,162 @@ class ServingEngine:
                         new_len = n
                     self.store.save(Profile(model_name, ratio), it.item_id,
                                     arrays, new_len)
+                for ratio in quant_ratios:
+                    arrays, new_len = compress_item_cache(
+                        cfg, item_cache, em.stats, ratio, n)
+                    self.store.save(Profile(model_name, ratio, quant=True),
+                                    it.item_id, quantize_kv(arrays),
+                                    new_len)
 
     # ---------------- online phase ----------------
 
     def max_batch_for(self, model_name: str, ratio: float,
-                      item_id: Optional[int] = None) -> int:
+                      item_id: Optional[int] = None,
+                      quant: bool = False) -> int:
         """Memory-bounded max decode batch for a (model, ratio) profile.
 
         Higher compression -> smaller per-item caches -> larger batches ->
         fewer calls: the paper's batching speedup mechanism (§5), exposed
         so the planner's batch-size-aware cost model can exploit the
-        compression -> batch-size link. Measures per-item bytes from a
-        stored shard (any shard if `item_id` is None); never exceeds
-        `max_batch`. Falls back to `max_batch` when the profile has no
-        stored shards yet.
+        compression -> batch-size link. Per-item bytes come from the
+        store's profile metadata (recorded at save time — no shard read
+        on the flush path); never exceeds `max_batch`. Falls back to
+        `max_batch` when the profile has no stored shards yet.
         """
-        profile = Profile(model_name, ratio)
-        if item_id is None:
-            item_id = self.store.any_item_id(profile)
-            if item_id is None:
-                return self.max_batch
-        shard = self.store.load(profile, item_id)
-        per_item = sum(a.nbytes for k, a in shard.items()
-                       if k != "__length__")
+        profile = Profile(model_name, ratio, quant)
+        per_item = self.store.item_nbytes(profile, item_id)
+        if per_item is None:
+            return self.max_batch
         b = max(1, int(self.memory_budget / max(per_item, 1)))
         return min(b, self.max_batch)
 
     def _batch_size(self, profile: Profile, item_ids) -> int:
         b = self.max_batch_for(profile.model_name, profile.ratio,
-                               item_ids[0])
+                               item_ids[0], quant=profile.quant)
         return min(b, len(item_ids))
 
-    def _decode_fn(self, model_name: str):
-        if model_name not in self._decode_jit:
+    def _decode_fn(self, model_name: str, fused: bool, backend: str):
+        key = (model_name, fused, backend)
+        if key not in self._decode_jit:
             em = self.models[model_name]
 
-            def run_tokens(params, cache, tokens):
-                """Feed tokens (B, L) sequentially; return final logits."""
-                def step(cache, tok):
-                    logits, cache = decode_step(params, em.cfg, cache,
-                                                tokens=tok[:, None])
-                    return cache, logits
-                cache, logits_seq = jax.lax.scan(
-                    step, cache, jnp.moveaxis(tokens, 1, 0))
-                return logits_seq[-1], cache
+            if fused:
+                def run_tokens(params, cache, tokens):
+                    """All query tokens in ONE fused attention dispatch."""
+                    return decode_multi(params, em.cfg, cache,
+                                        tokens=tokens, kernels=backend)
+            else:
+                def run_tokens(params, cache, tokens):
+                    """Feed tokens (B, L) sequentially; return final
+                    logits."""
+                    def step(cache, tok):
+                        logits, cache = decode_step(params, em.cfg, cache,
+                                                    tokens=tok[:, None],
+                                                    kernels=backend)
+                        return cache, logits
+                    cache, logits_seq = jax.lax.scan(
+                        step, cache, jnp.moveaxis(tokens, 1, 0))
+                    return logits_seq[-1], cache
 
-            self._decode_jit[model_name] = jax.jit(run_tokens)
-        return self._decode_jit[model_name]
+            self._decode_jit[key] = jax.jit(run_tokens)
+        return self._decode_jit[key]
+
+    def device_cache_clear(self):
+        with self._dev_lock:
+            self._dev_cache.clear()
+            self._dev_bytes = 0
+
+    def _load_cached(self, em: EngineModel, profile: Profile,
+                     ids: Sequence[int], headroom: int, n_real: int):
+        """load_batch through the device-resident LRU (kv_bytes counts
+        real loads only — a hit skips the npz-reload + re-pad + H2D copy
+        entirely)."""
+        if not self.device_cache:
+            cache, _ = self.store.load_batch(
+                em.cfg, profile, ids, pad_to_multiple=KERNEL_BLOCK_S,
+                headroom=headroom, n_real=n_real)
+            return cache
+        key = (profile.tag, tuple(ids), headroom)
+        with self._dev_lock:
+            hit = self._dev_cache.get(key)
+            if hit is not None:
+                self._dev_cache.move_to_end(key)
+                self.dev_cache_hits += 1
+                return hit[0]
+            self.dev_cache_misses += 1
+            cache, _ = self.store.load_batch(
+                em.cfg, profile, ids, pad_to_multiple=KERNEL_BLOCK_S,
+                headroom=headroom, n_real=n_real)
+            nbytes = sum(np.asarray(v).nbytes if not hasattr(v, "nbytes")
+                         else v.nbytes for v in cache.values())
+            self._dev_cache[key] = (cache, nbytes)
+            self._dev_bytes += nbytes
+            while self._dev_bytes > self.memory_budget \
+                    and len(self._dev_cache) > 1:
+                _, (_, old_bytes) = self._dev_cache.popitem(last=False)
+                self._dev_bytes -= old_bytes
+            return cache
+
+    def _flush(self, em: EngineModel, profile: Profile, ids: List[int],
+               query_tokens: Sequence[int], bs: int):
+        """One decode flush: load (or device-cache-hit) the batch's
+        caches, run the query, return logits (len(ids) rows)."""
+        # shape-bucketed batches, capped so padding never exceeds the
+        # memory-bounded batch size
+        pad = max(0, min(_bucket(len(ids)), bs) - len(ids))
+        fused = self.fused and supports_fused_decode(em.cfg)
+        backend = KOPS.resolve_backend(self.kernels)
+        fn = self._decode_fn(profile.model_name, fused, backend)
+        cache = self._load_cached(em, profile, ids + ids[:1] * pad,
+                                  headroom=len(query_tokens) + 2,
+                                  n_real=len(ids))
+        q = jnp.asarray([list(query_tokens)] * (len(ids) + pad), jnp.int32)
+        logits, _ = fn(em.params, cache, q)
+        self.attn_dispatches += 1 if fused else len(query_tokens)
+        return logits[:len(ids)]
 
     def run_filter(self, model_name: str, profile_ratio: float,
                    item_ids: Sequence[int], query_tokens: Sequence[int],
-                   yes_token: int, no_token: int) -> np.ndarray:
+                   yes_token: int, no_token: int,
+                   quant: bool = False) -> np.ndarray:
         """Log-odds per item: logit(yes) - logit(no), prefill skipped."""
         em = self.models[model_name]
-        profile = Profile(model_name, profile_ratio)
+        profile = Profile(model_name, profile_ratio, quant)
         out = np.zeros(len(item_ids), np.float32)
         bs = self._batch_size(profile, item_ids)
-        fn = self._decode_fn(model_name)
         for s in range(0, len(item_ids), bs):
             ids = list(item_ids[s:s + bs])
-            pad = _bucket(len(ids)) - len(ids)     # shape-bucketed batches
-            cache, _ = self.store.load_batch(
-                em.cfg, profile, ids + ids[:1] * pad,
-                headroom=len(query_tokens) + 2, n_real=len(ids))
-            q = jnp.asarray([list(query_tokens)] * (len(ids) + pad),
-                            jnp.int32)
-            logits, _ = fn(em.params, cache, q)
+            logits = self._flush(em, profile, ids, query_tokens, bs)
             lo = np.asarray(logits[:, yes_token] - logits[:, no_token],
                             np.float32)
-            out[s:s + len(ids)] = lo[:len(ids)]
+            out[s:s + len(ids)] = lo
         return out
 
     def run_map(self, model_name: str, profile_ratio: float,
                 item_ids: Sequence[int], query_tokens: Sequence[int],
-                value_tokens: Sequence[int]
+                value_tokens: Sequence[int], quant: bool = False
                 ) -> Tuple[np.ndarray, np.ndarray]:
         """Greedy value among `value_tokens` + confidence (logit margin)."""
         em = self.models[model_name]
-        profile = Profile(model_name, profile_ratio)
+        profile = Profile(model_name, profile_ratio, quant)
         vals = np.zeros(len(item_ids), np.int64)
         confs = np.zeros(len(item_ids), np.float32)
         bs = self._batch_size(profile, item_ids)
-        fn = self._decode_fn(model_name)
         vt = jnp.asarray(list(value_tokens))
         for s in range(0, len(item_ids), bs):
             ids = list(item_ids[s:s + bs])
-            pad = _bucket(len(ids)) - len(ids)
-            cache, _ = self.store.load_batch(
-                em.cfg, profile, ids + ids[:1] * pad,
-                headroom=len(query_tokens) + 2, n_real=len(ids))
-            q = jnp.asarray([list(query_tokens)] * (len(ids) + pad),
-                            jnp.int32)
-            logits, _ = fn(em.params, cache, q)
+            logits = self._flush(em, profile, ids, query_tokens, bs)
             vlogits = logits[:, vt]                        # (B, n_vals)
             top2 = jax.lax.top_k(vlogits, 2)[0]
-            vals[s:s + len(ids)] = np.asarray(
-                vt[jnp.argmax(vlogits, -1)])[:len(ids)]
-            confs[s:s + len(ids)] = np.asarray(
-                top2[:, 0] - top2[:, 1])[:len(ids)]
+            vals[s:s + len(ids)] = np.asarray(vt[jnp.argmax(vlogits, -1)])
+            confs[s:s + len(ids)] = np.asarray(top2[:, 0] - top2[:, 1])
         return vals, confs
 
 
 def _bucket(n: int) -> int:
     """Round batch size up to a power of two: bounded jit-shape diversity
-    across cascade stages (dispatch overhead, not semantics)."""
+    across cascade stages (dispatch overhead, not semantics). Callers cap
+    the result at the memory-bounded batch size (see _flush)."""
     b = 1
     while b < n:
         b *= 2

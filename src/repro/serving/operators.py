@@ -30,34 +30,43 @@ class KVCacheLLMOperator(PhysicalOperator):
     uses_llm = True
 
     def __init__(self, engine: ServingEngine, model_name: str, ratio: float,
-                 is_gold: bool = False):
+                 is_gold: bool = False, quant: bool = False):
         self.engine = engine
         self.model_name = model_name
         self.ratio = ratio
         self.is_gold = is_gold
-        self.name = f"{model_name}-kv{int(round(ratio * 100)):02d}"
+        self.quant = quant
+        self.name = (f"{model_name}-kv{int(round(ratio * 100)):02d}"
+                     + ("i8" if quant else ""))
 
     def run_filter(self, items: Sequence[Item], op: SemFilter) -> np.ndarray:
         ids = [it.item_id for it in items]
         return self.engine.run_filter(
             self.model_name, self.ratio, ids,
-            [filter_query_token(op.task_id)], TOK_YES, TOK_NO)
+            [filter_query_token(op.task_id)], TOK_YES, TOK_NO,
+            quant=self.quant)
 
     def run_map(self, items: Sequence[Item], op: SemMap):
         ids = [it.item_id for it in items]
         vals, conf = self.engine.run_map(
             self.model_name, self.ratio, ids, [map_query_token(op.task_id)],
-            [value_token(v) for v in range(N_VALUES)])
+            [value_token(v) for v in range(N_VALUES)], quant=self.quant)
         return vals, conf
 
     def cost_model(self) -> float:
         d = self.engine.models[self.model_name].cfg.d_model
-        return d ** 2 * (1.0 - 0.6 * self.ratio)
+        cost = d ** 2 * (1.0 - 0.6 * self.ratio)
+        if self.quant:
+            # int8 KV streams ~half the HBM bytes of the bf16/f32 cache;
+            # the planner prices the memory-bound decode accordingly
+            cost *= 0.55
+        return cost
 
     def max_batch(self):
         """Memory-budgeted batch cap for this profile: the compression ->
         batch-size link the batch-aware cost model feeds to the planner."""
-        return self.engine.max_batch_for(self.model_name, self.ratio)
+        return self.engine.max_batch_for(self.model_name, self.ratio,
+                                         quant=self.quant)
 
 
 class EmbeddingFilterOperator(PhysicalOperator):
@@ -126,27 +135,32 @@ class PythonMapOperator(PhysicalOperator):
 
 def make_registry(engine: ServingEngine, *, sm: str = "sm", lg: str = "lg",
                   sm_ratios=(0.8, 0.5, 0.0), lg_ratios=(0.8, 0.5, 0.3),
+                  sm_int8=(), lg_int8=(),
                   include_cheap: bool = True):
-    """Build the semantic-op -> cascade-candidates registry (gold last)."""
+    """Build the semantic-op -> cascade-candidates registry (gold last).
+
+    `sm_int8` / `lg_int8` list compression ratios whose int8-quantized
+    profiles exist in the store; each becomes a distinct cascade
+    candidate (suffix `i8`) the planner prices at the halved HBM traffic.
+    """
 
     def registry(op) -> List[PhysicalOperator]:
         ops: List[PhysicalOperator] = []
         if isinstance(op, SemFilter):
             if include_cheap:
                 ops.append(EmbeddingFilterOperator(engine, sm))
-            for r in sm_ratios:
-                ops.append(KVCacheLLMOperator(engine, sm, r))
-            for r in lg_ratios:
-                ops.append(KVCacheLLMOperator(engine, lg, r))
-            ops.append(KVCacheLLMOperator(engine, lg, 0.0, is_gold=True))
         else:
             if include_cheap:
                 ops.append(PythonMapOperator())
-            for r in sm_ratios:
-                ops.append(KVCacheLLMOperator(engine, sm, r))
-            for r in lg_ratios:
-                ops.append(KVCacheLLMOperator(engine, lg, r))
-            ops.append(KVCacheLLMOperator(engine, lg, 0.0, is_gold=True))
+        for r in sm_int8:
+            ops.append(KVCacheLLMOperator(engine, sm, r, quant=True))
+        for r in sm_ratios:
+            ops.append(KVCacheLLMOperator(engine, sm, r))
+        for r in lg_int8:
+            ops.append(KVCacheLLMOperator(engine, lg, r, quant=True))
+        for r in lg_ratios:
+            ops.append(KVCacheLLMOperator(engine, lg, r))
+        ops.append(KVCacheLLMOperator(engine, lg, 0.0, is_gold=True))
         return ops
 
     return registry

@@ -281,19 +281,30 @@ def test_kv_bytes_parity_across_dispatchers(world):
     counter is thread-scoped and each tuple's cache shard is loaded
     exactly once per stage that scores it, so per-stage kv_bytes are
     bit-identical across inline / threads / sharded — the old
-    process-global counter double-counted overlapping flushes."""
+    process-global counter double-counted overlapping flushes.
+
+    The device-resident profile cache is disabled for this test: cache
+    hits intentionally skip loading (and so don't count kv_bytes), which
+    would zero out the counters on every run after the first."""
     ds, sess = world
     frame = _frame(sess, ds)
-    by_disp = {}
-    for disp in ("inline", "threads:3", "sharded:2"):
-        res = frame.execute(partition_size=30, dispatcher=disp)
-        by_disp[disp] = {(s.logical_idx, s.stage, s.op_name): s.kv_bytes
-                         for s in res.stage_stats}
-        # engine-backed LLM stages must actually touch the cache store
-        assert sum(by_disp[disp].values()) > 0, disp
-    ref = by_disp["inline"]
-    for disp in ("threads:3", "sharded:2"):
-        assert by_disp[disp] == ref, f"kv_bytes drifted under {disp}"
+    eng = sess.engine
+    dc0 = eng.device_cache
+    eng.device_cache = False
+    eng.device_cache_clear()
+    try:
+        by_disp = {}
+        for disp in ("inline", "threads:3", "sharded:2"):
+            res = frame.execute(partition_size=30, dispatcher=disp)
+            by_disp[disp] = {(s.logical_idx, s.stage, s.op_name): s.kv_bytes
+                             for s in res.stage_stats}
+            # engine-backed LLM stages must actually touch the cache store
+            assert sum(by_disp[disp].values()) > 0, disp
+        ref = by_disp["inline"]
+        for disp in ("threads:3", "sharded:2"):
+            assert by_disp[disp] == ref, f"kv_bytes drifted under {disp}"
+    finally:
+        eng.device_cache = dc0
 
 
 # ---------------------------------------------------------------------------

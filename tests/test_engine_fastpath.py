@@ -1,0 +1,330 @@
+"""Serving fast path: fused one-dispatch flushes, device-resident profile
+cache, int8 KV profiles end to end, memory-bounded bucketing, and the
+API-level guarantee that flipping STRETTO_KERNELS between the ref oracle
+and Pallas interpret mode changes neither query decisions nor the
+EXPLAIN ANALYZE telemetry."""
+import numpy as np
+import pytest
+
+from repro.api import Session, SessionConfig
+from repro.cache.store import CacheStore, Profile
+from repro.core import PlannerConfig
+from repro.data.synthetic import (TOK_NO, TOK_YES, filter_query_token,
+                                  make_dataset, make_planted_params,
+                                  planted_config)
+from repro.serving.engine import KERNEL_BLOCK_S, ServingEngine, _bucket
+from repro.serving.operators import KVCacheLLMOperator
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    ds = make_dataset("fp", 60, seed=3)
+    store = CacheStore(str(tmp_path_factory.mktemp("cache")))
+    eng = ServingEngine(store, device_cache=False)
+    cfg = planted_config("sm")
+    eng.register_model("sm", cfg, make_planted_params(cfg, seed=1))
+    eng.build_profiles("sm", ds.items, ratios=[0.0, 0.5],
+                       quant_ratios=[0.5], prefill_batch=30)
+    return eng, ds
+
+
+def _ids(ds, n):
+    return [it.item_id for it in ds.items[:n]]
+
+
+# ---------------------------------------------------------------------------
+# bucketing respects the memory budget
+# ---------------------------------------------------------------------------
+
+def test_bucket_cap_never_exceeds_memory_batch(engine, monkeypatch):
+    """Regression: power-of-two bucketing used to round 48 ids up to a
+    64-wide batch even when the memory budget only admitted 48."""
+    eng, ds = engine
+    per_item = eng.store.item_nbytes(Profile("sm", 0.0))
+    widths = []
+    orig = eng.store.load_batch
+
+    def spy(cfg, profile, item_ids, **kw):
+        widths.append(len(item_ids))
+        return orig(cfg, profile, item_ids, **kw)
+
+    monkeypatch.setattr(eng.store, "load_batch", spy)
+    budget0 = eng.memory_budget
+    try:
+        eng.memory_budget = 48 * per_item          # admits 48, not 64
+        assert eng.max_batch_for("sm", 0.0) == 48
+        ids = _ids(ds, 48)
+        out = eng.run_filter("sm", 0.0, ids, [filter_query_token(1)],
+                             TOK_YES, TOK_NO)
+        assert len(out) == 48
+        assert widths == [48]                      # not bucketed to 64
+        # a ragged final chunk still buckets up (shape-diversity bound)
+        eng.memory_budget = 20 * per_item
+        widths.clear()
+        eng.run_filter("sm", 0.0, _ids(ds, 45), [filter_query_token(1)],
+                       TOK_YES, TOK_NO)
+        assert widths == [20, 20, 8]   # _bucket(5) = 8, under the cap
+    finally:
+        eng.memory_budget = budget0
+
+
+def test_bucket_helper():
+    assert [_bucket(n) for n in (1, 2, 3, 5, 48, 64)] == [1, 2, 4, 8, 64, 64]
+
+
+# ---------------------------------------------------------------------------
+# batch sizing reads store metadata, not shards
+# ---------------------------------------------------------------------------
+
+def test_max_batch_for_reads_metadata_not_shards(engine, monkeypatch):
+    """max_batch_for runs on every flush; it must not decompress an .npz
+    shard. A store reopened on the same root (cold in-memory cache) must
+    size batches from _meta.jsonl alone."""
+    eng, _ = engine
+    store2 = CacheStore(eng.store.root)
+
+    def boom(*a, **k):
+        raise AssertionError("max_batch_for read a shard")
+
+    monkeypatch.setattr(store2, "load", boom)
+    eng2 = ServingEngine(store2, memory_budget_bytes=eng.memory_budget)
+    for ratio, quant in ((0.0, False), (0.5, False), (0.5, True)):
+        b = eng2.max_batch_for("sm", ratio, quant=quant)
+        assert 1 <= b <= eng2.max_batch
+    # int8 shards are smaller -> at least as many fit in the budget
+    per = store2.item_nbytes(Profile("sm", 0.5))
+    eng2.memory_budget = 10 * per
+    assert (eng2.max_batch_for("sm", 0.5, quant=True)
+            >= eng2.max_batch_for("sm", 0.5))
+
+
+# ---------------------------------------------------------------------------
+# fused flush: one attention dispatch per flush
+# ---------------------------------------------------------------------------
+
+def test_fused_one_dispatch_per_flush(engine):
+    eng, ds = engine
+    ids = _ids(ds, 8)
+    query = [filter_query_token(1)]
+    assert eng.fused   # default on
+    base = eng.attn_dispatches
+    fused = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+    assert eng.attn_dispatches - base == 1         # ONE fused dispatch
+    try:
+        eng.fused = False
+        eng._decode_jit.clear()
+        base = eng.attn_dispatches
+        scan = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        assert eng.attn_dispatches - base == len(query)  # one per token
+    finally:
+        eng.fused = True
+        eng._decode_jit.clear()
+    # and the fused path computes the same answer as the scan
+    np.testing.assert_allclose(fused, scan, atol=1e-4)
+
+
+def test_fused_multi_token_query(engine):
+    """Multi-token operator queries (the common case) still flush once."""
+    eng, ds = engine
+    ids = _ids(ds, 6)
+    query = [filter_query_token(1), filter_query_token(2),
+             filter_query_token(3)]
+    base = eng.attn_dispatches
+    fused = eng.run_filter("sm", 0.5, ids, query, TOK_YES, TOK_NO)
+    assert eng.attn_dispatches - base == 1
+    try:
+        eng.fused = False
+        eng._decode_jit.clear()
+        base = eng.attn_dispatches
+        scan = eng.run_filter("sm", 0.5, ids, query, TOK_YES, TOK_NO)
+        assert eng.attn_dispatches - base == len(query)
+    finally:
+        eng.fused = True
+        eng._decode_jit.clear()
+    np.testing.assert_allclose(fused, scan, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# device-resident profile cache
+# ---------------------------------------------------------------------------
+
+def test_device_cache_hit_skips_load_and_kv_bytes(engine):
+    eng, ds = engine
+    ids = _ids(ds, 8)
+    query = [filter_query_token(2)]
+    try:
+        eng.device_cache = True
+        eng.device_cache_clear()
+        h0, m0 = eng.dev_cache_hits, eng.dev_cache_misses
+        first = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        assert eng.dev_cache_misses - m0 == 1
+        bytes_after_first = eng.store.bytes_loaded
+        again = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        # hit: identical results, no reload, kv_bytes unchanged
+        np.testing.assert_array_equal(first, again)
+        assert eng.dev_cache_hits - h0 == 1
+        assert eng.store.bytes_loaded == bytes_after_first
+        # a different batch is a miss and DOES count bytes
+        other = _ids(ds, 10)[8:]
+        eng.run_filter("sm", 0.0, other, query, TOK_YES, TOK_NO)
+        assert eng.store.bytes_loaded > bytes_after_first
+        assert eng.dev_cache_misses - m0 == 2
+    finally:
+        eng.device_cache = False
+        eng.device_cache_clear()
+
+
+def test_device_cache_disabled_always_loads(engine):
+    eng, ds = engine
+    assert not eng.device_cache        # suite default (conftest)
+    ids = _ids(ds, 4)
+    query = [filter_query_token(3)]
+    eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+    b0 = eng.store.bytes_loaded
+    eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+    assert eng.store.bytes_loaded > b0   # every flush loads, and counts
+
+
+def test_device_cache_evicts_lru_under_budget(engine):
+    eng, ds = engine
+    per_item = eng.store.item_nbytes(Profile("sm", 0.0))
+    budget0 = eng.memory_budget
+    try:
+        eng.device_cache = True
+        eng.device_cache_clear()
+        # room for ~2 four-item padded batches, not 6
+        eng.memory_budget = 16 * per_item
+        query = [filter_query_token(1)]
+        for s in range(6):
+            ids = _ids(ds, 24)[4 * s:4 * s + 4]
+            eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        assert len(eng._dev_cache) < 6
+        assert eng._dev_bytes <= eng.memory_budget \
+            or len(eng._dev_cache) == 1
+    finally:
+        eng.device_cache = False
+        eng.device_cache_clear()
+        eng.memory_budget = budget0
+
+
+# ---------------------------------------------------------------------------
+# int8 KV profiles end to end
+# ---------------------------------------------------------------------------
+
+def test_int8_profile_stored_and_distinct(engine):
+    eng, ds = engine
+    p8 = Profile("sm", 0.5, quant=True)
+    assert p8.tag.endswith("__q8")
+    shard = eng.store.load(p8, ds.items[0].item_id)
+    assert shard["k"].dtype == np.int8 and shard["v"].dtype == np.int8
+    assert shard["k_scale"].dtype == np.float32
+    assert shard["k_scale"].shape == shard["k"].shape[:-1]
+    # int8 shards are materially smaller than their f32 rung
+    assert (eng.store.item_nbytes(p8)
+            < 0.6 * eng.store.item_nbytes(Profile("sm", 0.5)))
+
+
+def test_int8_filter_accuracy(engine):
+    """int8 decisions track the f32 rung: the quantization is a real
+    precision trade, not a different answer."""
+    eng, ds = engine
+    ids = [it.item_id for it in ds.items]
+    q = [filter_query_token(1)]
+    lo_f32 = eng.run_filter("sm", 0.5, ids, q, TOK_YES, TOK_NO)
+    lo_int8 = eng.run_filter("sm", 0.5, ids, q, TOK_YES, TOK_NO, quant=True)
+    agree = ((lo_f32 > 0) == (lo_int8 > 0)).mean()
+    assert agree > 0.9
+    np.testing.assert_allclose(lo_int8, lo_f32, atol=0.5)
+
+
+def test_int8_operator_surface(engine):
+    eng, _ = engine
+    op32 = KVCacheLLMOperator(eng, "sm", 0.5)
+    op8 = KVCacheLLMOperator(eng, "sm", 0.5, quant=True)
+    assert op8.name != op32.name and "i8" in op8.name
+    assert op8.cost_model() < op32.cost_model()
+    assert op8.max_batch() >= 1
+
+
+# ---------------------------------------------------------------------------
+# API level: backend flip changes nothing observable
+# ---------------------------------------------------------------------------
+
+FAST = PlannerConfig(steps=120, restarts=2, snapshots=2)
+
+
+@pytest.fixture(scope="module")
+def api_world(tmp_path_factory):
+    ds = make_dataset("fpapi", 40, seed=9)
+    session = Session(SessionConfig(
+        cache_dir=str(tmp_path_factory.mktemp("cache")),
+        models=("sm",), profile_ratios=(0.0, 0.8),
+        sm_ratios=(0.8, 0.0), lg_ratios=(0.0,),
+        planner=FAST, sample_frac=0.4, partition_size=20))
+    session.prepare(ds.items)
+    yield ds, session
+    session.close()
+
+
+def _stats_key(result):
+    return [(s.op_name, s.n_tuples, s.n_llm_calls, s.kv_bytes, s.n_batches)
+            for s in result.stage_stats]
+
+
+def test_decisions_identical_across_kernel_backends(api_world, monkeypatch):
+    """STRETTO_KERNELS=ref vs interpret: same accepted set, same map
+    values, same EXPLAIN ANALYZE counters — on both dispatchers. The
+    backend is resolved at flush time, so flipping the env between runs
+    of one session exercises real re-dispatch."""
+    ds, sess = api_world
+    frame = sess.frame(ds.items).sem_filter("f1", 1).sem_map("m2", 2)
+    runs = {}
+    for backend in ("ref", "interpret"):
+        monkeypatch.setenv("STRETTO_KERNELS", backend)
+        for eng in sess.engines.values():
+            eng._decode_jit.clear()
+        for dispatcher in ("inline", "threads"):
+            runs[(backend, dispatcher)] = frame.execute(
+                dispatcher=dispatcher)
+    monkeypatch.delenv("STRETTO_KERNELS", raising=False)
+    base = runs[("ref", "inline")]
+    for key, res in runs.items():
+        np.testing.assert_array_equal(res.accepted, base.accepted,
+                                      err_msg=str(key))
+        for col, vals in res.map_values.items():
+            np.testing.assert_array_equal(vals, base.map_values[col],
+                                          err_msg=str(key))
+        assert _stats_key(res) == _stats_key(base), key
+    # EXPLAIN ANALYZE is identical apart from measured wall-clock columns
+    import re
+
+    def strip_times(text):
+        text = re.sub(r"\d+\.\d+(ms|s|us)\b", "<t>", text)
+        return re.sub(r"(runtime_s|wall_s)=\d+\.\d+", r"\1=<t>", text)
+
+    rep_ref = strip_times(runs[("ref", "inline")].explain_analyze().render())
+    rep_int = strip_times(
+        runs[("interpret", "inline")].explain_analyze().render())
+    assert rep_ref == rep_int
+
+
+def test_session_config_validates_kernels_backend():
+    """The kernels knob is part of the declarative config surface and is
+    validated at construction, not first flush."""
+    from repro.api import EngineSpec
+    spec = EngineSpec("e", kernels="ref", fused=False, device_cache=True)
+    assert spec.kernels == "ref"
+    with pytest.raises(ValueError, match="kernels"):
+        EngineSpec("e", kernels="cuda")
+    cfg = SessionConfig(kernels="interpret", cache_dir="/tmp/nowhere")
+    assert cfg.resolved_engines()[0].kernels == "interpret"
+
+
+def test_engine_loads_padded_to_kernel_block(engine):
+    """Every engine load pads S to the Pallas block multiple so any
+    backend's grid is legal."""
+    eng, ds = engine
+    cache, _ = eng.store.load_batch(
+        eng.models["sm"].cfg, Profile("sm", 0.0), _ids(ds, 3),
+        pad_to_multiple=KERNEL_BLOCK_S, headroom=4, n_real=3)
+    assert cache["k"].shape[2] % KERNEL_BLOCK_S == 0
