@@ -182,6 +182,7 @@ def gate(out_dir: str, baseline_dir: Optional[str] = None,
         "ts": time.strftime("%Y%m%dT%H%M%SZ", time.gmtime()),
         "sha": _git_sha(),
         "backend_device": jax.default_backend(),
+        "peaks": roofline.PEAKS.name,
         "shapes": {"B": GATE_B, "S": GATE_S, "KV": GATE_KV, "G": GATE_G,
                    "dk": GATE_DK, "Lq": GATE_LQ},
         "lowering": checks,
@@ -194,6 +195,10 @@ def gate(out_dir: str, baseline_dir: Optional[str] = None,
         print(f"[lowering] {c['name']}: {c['derived']} ({status})")
         failed |= not c["ok"]
 
+    print(f"[gate] roofline priced against peak set "
+          f"{roofline.PEAKS.name!r} "
+          f"({roofline.PEAKS.flops / 1e9:.0f} GFLOP/s, "
+          f"{roofline.PEAKS.hbm_bw / 1e9:.0f} GB/s)")
     for r in rows:
         print(f"[perf] {r['name']}: {r['wall_us_per_tuple']:.1f} us/tuple "
               f"(roofline bound {r['roofline_us_per_tuple']:.1f})")

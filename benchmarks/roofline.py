@@ -5,14 +5,19 @@ from __future__ import annotations
 import glob
 import json
 import os
+import sys
 from typing import Dict, List
 
-# Peak numbers the kernels perf gate measures against. Deliberately
-# conservative CPU-class defaults (the gate runs on CI CPU runners; the
-# TPU numbers come from the dry-run roofline artifacts) — overridable via
-# env so a TPU run can gate against HBM bandwidth instead.
-MEM_BW_GBS = float(os.environ.get("STRETTO_ROOFLINE_BW_GBS", "20.0"))
-PEAK_GFLOPS = float(os.environ.get("STRETTO_ROOFLINE_GFLOPS", "100.0"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import resolve_peaks  # noqa: E402
+
+# The peak set the kernels perf gate measures against: the shared
+# CI-CPU defaults from launch/mesh.py (the single source of hardware
+# peak numbers), with the STRETTO_ROOFLINE_GFLOPS / _BW_GBS env
+# overrides applied — a TPU run exports those to gate against real HBM
+# bandwidth. PEAKS.name records which set priced the report.
+PEAKS = resolve_peaks()
 
 
 def decode_bound_s(B: int, S: int, KV: int, G: int, dk: int, dv: int,
@@ -32,11 +37,12 @@ def decode_bound_s(B: int, S: int, KV: int, G: int, dk: int, dv: int,
     kv_bytes += B * S * KV * 2 * scale_bytes          # k_scale + v_scale
     qo_bytes = B * n_q * KV * G * (dk + dv) * 4
     flops = 2.0 * B * n_q * KV * G * S * (dk + dv)
-    mem_s = (kv_bytes + qo_bytes) / (MEM_BW_GBS * 1e9)
-    compute_s = flops / (PEAK_GFLOPS * 1e9)
+    mem_s = (kv_bytes + qo_bytes) / PEAKS.hbm_bw
+    compute_s = flops / PEAKS.flops
     return {"mem_s": mem_s, "compute_s": compute_s,
             "bound_s": max(mem_s, compute_s),
-            "dominant": "memory" if mem_s >= compute_s else "compute"}
+            "dominant": "memory" if mem_s >= compute_s else "compute",
+            "peaks": PEAKS.name}
 
 
 def load(out_dir: str = "results/dryrun_sp") -> List[Dict]:

@@ -99,6 +99,11 @@ class ExplainReport:
     measured_partitions: Optional[int] = None
     measured_dispatcher: Optional[str] = None     # what actually ran it
     measured_workers: Optional[int] = None
+    # transfer overlap telemetry (serving engines only): H2D copy time
+    # the engine hid behind decode compute, and KV cache bytes the jitted
+    # decode donated back to XLA — None until ANALYZE
+    measured_h2d_overlap_s: Optional[float] = None
+    measured_donated_bytes: Optional[int] = None
     # per-engine measured totals (engine, wall_s, n_tuples, n_llm_calls,
     # kv_bytes) — exact partition of the run totals; empty until ANALYZE,
     # rendered only for pooled (multi-engine-tagged) executions
@@ -185,6 +190,12 @@ class ExplainReport:
             measured_partitions=result.n_partitions,
             measured_dispatcher=result.dispatcher,
             measured_workers=result.n_workers,
+            measured_h2d_overlap_s=sum(
+                getattr(sg, "h2d_overlap_s", 0.0)
+                for sg in result.stage_stats),
+            measured_donated_bytes=sum(
+                getattr(sg, "donated_bytes", 0)
+                for sg in result.stage_stats),
             measured_engines=per_engine,
             **exec_cfg)
 
@@ -270,6 +281,13 @@ class ExplainReport:
                 f"(elapsed) partitions={self.measured_partitions} "
                 f"dispatcher={self.measured_dispatcher}"
                 f":{self.measured_workers}")
+            if self.measured_h2d_overlap_s or self.measured_donated_bytes:
+                out.append(
+                    f"transfers: h2d_overlap_s="
+                    f"{self.measured_h2d_overlap_s:.3f} (H2D hidden "
+                    f"behind decode) donated_MB="
+                    f"{self.measured_donated_bytes / 1e6:.1f} "
+                    f"(KV buffers returned to XLA)")
             if any(eng for eng, *_ in self.measured_engines):
                 for eng, wall, tuples, llm, kv in self.measured_engines:
                     out.append(

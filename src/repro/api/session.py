@@ -109,6 +109,20 @@ class EngineSpec:
                          LRU bounded by memory_budget_bytes; repeat
                          flushes skip reload + H2D copy and do NOT count
                          kv_bytes (None: STRETTO_DEVICE_CACHE, default on)
+      async_h2d        — overlap H2D transfers with decode compute: the
+                         engine prefetches the next flush batch's KV
+                         caches while the current batch decodes and
+                         donates consumed cache buffers back to XLA
+                         (surfaced as h2d_overlap_s / donated_bytes in
+                         EXPLAIN ANALYZE; None: STRETTO_ASYNC_H2D,
+                         default on). Never changes results.
+      device           — pin this engine on one device: an index into
+                         jax.devices() (wrapped modulo the device count,
+                         so specs stay valid on smaller hosts). Params
+                         are placed there once and every flush computes
+                         there. None: jax's default device. A "mesh"
+                         session dispatcher overrides this per corpus
+                         shard with its own mesh placement.
       sm_int8 / lg_int8 — compression ratios to ALSO store as int8
                          quantized profiles; each becomes a distinct
                          cascade candidate (operator suffix ``i8``) priced
@@ -130,12 +144,19 @@ class EngineSpec:
     kernels: Optional[str] = None
     fused: Optional[bool] = None
     device_cache: Optional[bool] = None
+    async_h2d: Optional[bool] = None
+    device: Optional[int] = None
     sm_int8: Tuple[float, ...] = ()
     lg_int8: Tuple[float, ...] = ()
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
             raise ValueError("EngineSpec.name must be a non-empty string")
+        if self.device is not None and (not isinstance(self.device, int)
+                                        or self.device < 0):
+            raise ValueError(
+                f"engine {self.name!r}: device must be a non-negative "
+                f"index into jax.devices(), got {self.device!r}")
         if self.kernels is not None:
             from repro.kernels.ops import VALID_BACKENDS
             if self.kernels not in VALID_BACKENDS:
@@ -212,8 +233,12 @@ class SessionConfig:
                          DEFAULT_COALESCE; also what the planner's
                          batch-aware cost model amortizes over)
       dispatcher       — runtime dispatcher spec ("inline" |
-                         "threads[:N]" | "sharded[:N]"), a Dispatcher
-                         instance, or None to read STRETTO_DISPATCHER
+                         "threads[:N]" | "sharded[:N]" | "mesh[:N]"),
+                         a Dispatcher instance, or None to read
+                         STRETTO_DISPATCHER. "mesh:N" scatters the
+                         partition loop over N corpus shards pinned onto
+                         the devices of a jax data-parallel mesh —
+                         decisions stay bit-identical to "inline"
 
     Measured feedback (the measure -> plan loop)
       feedback         — seeds the session's MeasuredBatchStore: a store
@@ -237,10 +262,11 @@ class SessionConfig:
     lg_ratios: Tuple[float, ...] = (0.8, 0.5, 0.3)
     include_cheap: bool = True
 
-    # kernel fast path (see EngineSpec for semantics)
+    # kernel fast path + transfer overlap (see EngineSpec for semantics)
     kernels: Optional[str] = None
     fused: Optional[bool] = None
     device_cache: Optional[bool] = None
+    async_h2d: Optional[bool] = None
     sm_int8: Tuple[float, ...] = ()
     lg_int8: Tuple[float, ...] = ()
 
@@ -293,7 +319,7 @@ class SessionConfig:
             memory_budget_bytes=self.memory_budget_bytes,
             max_batch=self.max_batch, model_seed=self.model_seed,
             kernels=self.kernels, fused=self.fused,
-            device_cache=self.device_cache,
+            device_cache=self.device_cache, async_h2d=self.async_h2d,
             sm_int8=tuple(self.sm_int8), lg_int8=tuple(self.lg_int8)),)
 
     def ladder(self) -> Tuple[float, ...]:
@@ -424,7 +450,12 @@ class Session:
                 CacheStore(cache_dir),
                 memory_budget_bytes=spec.memory_budget_bytes,
                 max_batch=spec.max_batch, kernels=spec.kernels,
-                fused=spec.fused, device_cache=spec.device_cache)
+                fused=spec.fused, device_cache=spec.device_cache,
+                async_h2d=spec.async_h2d)
+            if spec.device is not None:
+                import jax
+                devs = jax.devices()
+                eng.default_device = devs[spec.device % len(devs)]
             for name in spec.models:
                 mcfg = planted_config(name)
                 eng.register_model(

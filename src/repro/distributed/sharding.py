@@ -99,6 +99,21 @@ def sc(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, resolve(axes))
 
 
+def replicated_on(dev: "jax.Device") -> "jax.sharding.NamedSharding":
+    """A NamedSharding that replicates onto exactly one device.
+
+    Used by the runtime MeshDispatcher to pin one shard's engine state on
+    its device slice: a 1x1 sub-mesh of `dev` with the production axis
+    names, with the placement resolved through the same logical-axis rule
+    machinery the big meshes use ("embed" rows of params/KV profiles are
+    replicated, so this comes out as P() — everything on `dev`)."""
+    import numpy as np
+    sub = jax.sharding.Mesh(np.asarray([dev]).reshape(1, 1),
+                            ("data", "model"))
+    with use_rules(make_rules(), sub):
+        return jax.sharding.NamedSharding(sub, resolve(("embed", "embed")))
+
+
 def pspec_tree(axes_tree):
     """Map a pytree whose leaves are logical-axes tuples to PartitionSpecs.
     Requires active rules (call inside ``use_rules``)."""

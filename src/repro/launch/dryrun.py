@@ -28,8 +28,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed import sharding as sh
 from repro.launch import specs as SP
 from repro.launch.hlo_stats import analyze
-from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
-                               make_production_mesh)
+from repro.launch.mesh import TPU_V5E, make_production_mesh
 from repro.models import cache_axes, decode_step, param_axes, prefill
 from repro.training.optimizer import opt_state_axes
 from repro.training.train_step import make_train_step
@@ -159,15 +158,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     hlo = analyze(compiled.as_text())
 
     # roofline terms (per device; hlo stats are already per-device)
-    t_compute = hlo.flops / PEAK_FLOPS_BF16
-    t_memory = hlo.bytes / HBM_BW
-    t_coll = hlo.coll_bytes / ICI_BW
+    t_compute = hlo.flops / TPU_V5E.flops
+    t_memory = hlo.bytes / TPU_V5E.hbm_bw
+    t_coll = hlo.coll_bytes / TPU_V5E.ici_bw
     dominant = max((("compute", t_compute), ("memory", t_memory),
                     ("collective", t_coll)), key=lambda kv: kv[1])[0]
     mf = model_flops(cfg, shape)
     rec = {
         "arch": arch, "shape": shape_name, "opts": opts or {},
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "peaks": TPU_V5E.name,
         "n_devices": n_dev,
         "ok": True,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),

@@ -1,11 +1,21 @@
-"""Production mesh definitions.
+"""Production mesh definitions + the hardware peak numbers.
 
-A function, not a module-level constant, so importing this module never
-touches jax device state. The dry-run entrypoint sets
+Mesh builders are functions, not module-level constants, so importing
+this module never touches jax device state. The dry-run entrypoint sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
 import; everything else sees the real device count.
+
+This module is also the single source of hardware peak numbers: the
+dry-run roofline (launch/dryrun.py) and the kernels/dispatch perf gates
+(benchmarks/roofline.py) both price against a `HardwarePeaks` set from
+here — `resolve_peaks()` applies the ``STRETTO_ROOFLINE_*`` env
+overrides and names the resulting set, so every roofline report can say
+which peaks it measured against.
 """
 from __future__ import annotations
+
+import os
+from dataclasses import dataclass
 
 import jax
 
@@ -21,7 +31,52 @@ def make_local_mesh() -> "jax.sharding.Mesh":
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-# TPU v5e hardware constants for the roofline model (per chip)
-PEAK_FLOPS_BF16 = 197e12        # FLOP/s
-HBM_BW = 819e9                  # B/s
-ICI_BW = 50e9                   # B/s per link
+def make_dispatch_mesh(n_shards: int) -> "jax.sharding.Mesh":
+    """The runtime's data-parallel dispatch mesh (MeshDispatcher): up to
+    `n_shards` devices on the "data" axis, model axis 1-wide. Degenerates
+    to the local 1-device mesh on single-device hosts, and promotes to
+    the full production mesh when the host actually has a pod's worth of
+    chips — the same axis names either way, so the logical-axis sharding
+    rules (distributed/sharding.py) resolve identically."""
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) <= 1 or n_shards <= 1:
+        return make_local_mesh()
+    if n_shards >= 256 and len(devs) >= 256:
+        return make_production_mesh()
+    n = min(int(n_shards), len(devs))
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(n, 1),
+                             ("data", "model"))
+
+
+@dataclass(frozen=True)
+class HardwarePeaks:
+    """One hardware peak set a roofline can price against."""
+    name: str           # which peak set this is ("tpu-v5e", "ci-cpu", ...)
+    flops: float        # FLOP/s (per chip)
+    hbm_bw: float       # B/s (per chip)
+    ici_bw: float = 0.0  # B/s per interconnect link (0: single chip)
+
+
+# TPU v5e per-chip peaks — what the dry-run roofline prices against
+TPU_V5E = HardwarePeaks("tpu-v5e", flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+# deliberately conservative CPU-class peaks — what the CI perf gates on
+# CPU runners price against (a bound that is meaningful on the runner)
+CI_CPU = HardwarePeaks("ci-cpu", flops=100e9, hbm_bw=20e9)
+
+
+def resolve_peaks(default: HardwarePeaks = CI_CPU) -> HardwarePeaks:
+    """The peak set a roofline run prices against: `default` unless the
+    ``STRETTO_ROOFLINE_GFLOPS`` / ``STRETTO_ROOFLINE_BW_GBS`` env
+    overrides are set (a TPU run gates against HBM bandwidth by
+    exporting them); the returned name records that overrides applied."""
+    gflops = os.environ.get("STRETTO_ROOFLINE_GFLOPS")
+    bw_gbs = os.environ.get("STRETTO_ROOFLINE_BW_GBS")
+    if gflops is None and bw_gbs is None:
+        return default
+    return HardwarePeaks(
+        name=f"{default.name}+env",
+        flops=float(gflops) * 1e9 if gflops else default.flops,
+        hbm_bw=float(bw_gbs) * 1e9 if bw_gbs else default.hbm_bw,
+        ici_bw=default.ici_bw)

@@ -6,7 +6,8 @@ Layout
   backend.py    — Backend protocol + Oracle / KVCache / Reference backends
   executor.py   — streaming partitioned cascade executor (StageStats)
   dispatch.py   — pluggable flush dispatch: inline / thread pool /
-                  sharded partition scatter (STRETTO_DISPATCHER)
+                  sharded partition scatter / jax-mesh device scatter
+                  (STRETTO_DISPATCHER)
   plan_utils.py — public profile/plan helpers (gold membership,
                   pipeline data, selectivity estimation)
 
@@ -40,6 +41,7 @@ _EXPORTS = {
     "InlineDispatcher": "repro.runtime.dispatch",
     "ThreadPoolDispatcher": "repro.runtime.dispatch",
     "ShardedDispatcher": "repro.runtime.dispatch",
+    "MeshDispatcher": "repro.runtime.dispatch",
     "resolve_dispatcher": "repro.runtime.dispatch",
     "effective_spec": "repro.runtime.dispatch",
     "DISPATCHER_ENV": "repro.runtime.dispatch",

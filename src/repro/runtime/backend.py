@@ -123,6 +123,16 @@ class RegistryBackend:
         # engine's store counter.
         return 0
 
+    def transfer_stats(self) -> Tuple[float, int]:
+        """Monotonic (h2d_overlap_s, donated_bytes) counters for the
+        calling thread — H2D transfer time the engine hid behind decode
+        compute, and KV cache bytes donated back to XLA. Thread-scoped
+        for the same reason as kv_bytes_loaded. Kept OFF the Backend
+        protocol (it is optional — run_operator getattr-probes it), so
+        custom backends that only implement the protocol surface keep
+        satisfying the runtime_checkable isinstance check."""
+        return (0.0, 0)
+
 
 class OracleBackend(RegistryBackend):
     """Backend over the synthetic planted-signal registry (or any other
@@ -153,6 +163,9 @@ class KVCacheBackend(RegistryBackend):
         # thread, so per-call deltas are exact under concurrent dispatch
         return self.engine.store.bytes_loaded_local
 
+    def transfer_stats(self) -> Tuple[float, int]:
+        return self.engine.transfer_stats_local()
+
 
 class ReferenceBackend(RegistryBackend):
     """Uncompressed gold only: every semantic operator maps to the single
@@ -172,6 +185,9 @@ class ReferenceBackend(RegistryBackend):
 
     def kv_bytes_loaded(self) -> int:
         return self.engine.store.bytes_loaded_local
+
+    def transfer_stats(self) -> Tuple[float, int]:
+        return self.engine.transfer_stats_local()
 
 
 class EngineTaggedOperator(PhysicalOperator):
@@ -291,6 +307,16 @@ class PoolBackend(RegistryBackend):
         # store's loads, so a flush (which touches exactly one engine)
         # contributes its delta to exactly one term
         return sum(m.kv_bytes_loaded() for m in self.members.values())
+
+    def transfer_stats(self) -> Tuple[float, int]:
+        h2d, donated = 0.0, 0
+        for m in self.members.values():
+            fn = getattr(m, "transfer_stats", None)
+            if fn is not None:
+                mh, md = fn()
+                h2d += mh
+                donated += md
+        return (h2d, donated)
 
 
 def as_backend(registry_or_backend) -> Backend:

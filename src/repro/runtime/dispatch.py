@@ -27,17 +27,30 @@ A flush becomes a `FlushTask` submitted to a `Dispatcher`:
                          that maps onto a jax mesh axis or one process per
                          host in a multi-process deployment; here they run
                          on a thread pool sharing one engine.
+  MeshDispatcher       — the same partition-loop scatter over a *real*
+                         jax device mesh: each corpus shard owns a slice
+                         of the mesh's "data" axis (launch/mesh.py), the
+                         backend's engine params are placed on that slice
+                         with device_put + a NamedSharding resolved
+                         through the logical-axis rules
+                         (distributed/sharding.py), and every H2D copy /
+                         decode the shard issues lands on its own device.
+                         Same shard tiling, same merge contract, so
+                         decisions stay bit-identical to inline — only
+                         where the flushes run changes.
 
 Selection: pass a Dispatcher (or spec string) to `run_plan(dispatcher=...)`
 or set the ``STRETTO_DISPATCHER`` environment variable
-(``inline`` | ``threads[:N]`` | ``sharded[:N]``).
+(``inline`` | ``threads[:N]`` | ``sharded[:N]`` | ``mesh[:N]``).
 """
 from __future__ import annotations
 
+import contextlib
 import os
+import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 DISPATCHER_ENV = "STRETTO_DISPATCHER"
 
@@ -176,17 +189,101 @@ class ShardedDispatcher:
         return [(lo, min(lo + step, n_items))
                 for lo in range(0, n_items, max(step, 1))]
 
-    def map_shards(self, fn: Callable[[int, int], Any],
+    def map_shards(self, fn: Callable[[int, int, int], Any],
                    bounds: Sequence[Tuple[int, int]]) -> List[Any]:
+        """Run ``fn(shard_idx, lo, hi)`` for every shard; the index lets
+        dispatchers with per-shard placement (MeshDispatcher) route each
+        shard onto its own device slice."""
         if len(bounds) <= 1 or self.n_workers <= 1:
-            return [fn(lo, hi) for lo, hi in bounds]
+            return [fn(i, lo, hi) for i, (lo, hi) in enumerate(bounds)]
         with ThreadPoolExecutor(max_workers=self.n_workers,
                                 thread_name_prefix="stretto-shard") as pool:
-            futs = [pool.submit(fn, lo, hi) for lo, hi in bounds]
+            futs = [pool.submit(fn, i, lo, hi)
+                    for i, (lo, hi) in enumerate(bounds)]
             return [f.result() for f in futs]
 
     def close(self):
         pass
+
+
+def backend_engines(backend) -> List[Any]:
+    """Every ServingEngine a runtime backend routes flushes to: the
+    engine of a KVCache/Reference backend, the union over a PoolBackend's
+    members, [] for engineless (oracle/registry) backends. Used by
+    dispatchers that place engine state per device."""
+    eng = getattr(backend, "engine", None)
+    if eng is not None:
+        return [eng]
+    members = getattr(backend, "members", None)
+    if members:
+        out: List[Any] = []
+        for m in members.values():
+            out.extend(backend_engines(m))
+        return out
+    return []
+
+
+class MeshDispatcher(ShardedDispatcher):
+    """ShardedDispatcher over a real jax device mesh: shard i of the
+    partition-loop scatter runs with its engine params device_put onto
+    data-axis slice ``i % n_data`` of the dispatch mesh (replication
+    resolved through distributed.sharding's logical-axis rules), and with
+    that slice as the shard thread's default jax device, so cache loads
+    (H2D) and decode dispatches land per-device instead of contending for
+    one. Shard tiling (`shard_bounds`) and the merge contract are
+    inherited unchanged, so decisions / map values stay bit-identical to
+    the inline schedule; with fewer devices than shards the shards cycle
+    over the available slices (a 1-device host degenerates to
+    ShardedDispatcher behavior exactly).
+    """
+
+    name = "mesh"
+
+    def __init__(self, n_shards: Optional[int] = None,
+                 n_workers: Optional[int] = None):
+        import jax       # deferred: this module stays a cheap leaf import
+        n = int(n_shards) if n_shards else jax.local_device_count()
+        super().__init__(n, n_workers if n_workers is not None else n)
+        self._lock = threading.Lock()
+        self._mesh = None
+        self._data_slices: List[Tuple[Any, ...]] = []
+
+    @property
+    def mesh(self):
+        """The dispatch mesh (built lazily on first scatter): up to
+        n_shards devices on the "data" axis — launch.mesh's local /
+        production meshes finally wired into the runtime."""
+        with self._lock:
+            if self._mesh is None:
+                from repro.launch.mesh import make_dispatch_mesh
+                self._mesh = make_dispatch_mesh(self.n_shards)
+                # device slices along the data axis: row i holds the
+                # devices shard i runs on (model axis is 1-wide here)
+                self._data_slices = [tuple(row)
+                                     for row in self._mesh.devices]
+            return self._mesh
+
+    def shard_device(self, shard_idx: int):
+        """The device owning shard `shard_idx` (shards cycle when the
+        mesh has fewer data slices than shards)."""
+        _ = self.mesh
+        return self._data_slices[shard_idx % len(self._data_slices)][0]
+
+    @contextlib.contextmanager
+    def shard_context(self, shard_idx: int, backend):
+        """Everything shard `shard_idx` executes runs on its own device
+        slice: engine params are placed there via device_put + the
+        logical-rules NamedSharding, and the slice becomes the shard
+        thread's default device so batch H2D copies follow."""
+        import jax
+        from repro.distributed.sharding import replicated_on
+        dev = self.shard_device(shard_idx)
+        sharding = replicated_on(dev)
+        with contextlib.ExitStack() as stack:
+            for eng in backend_engines(backend):
+                stack.enter_context(eng.place_on(dev, sharding))
+            stack.enter_context(jax.default_device(dev))
+            yield
 
 
 def effective_spec(spec=None) -> str:
@@ -207,9 +304,11 @@ def resolve_dispatcher(spec=None) -> Tuple[Any, bool]:
 
     `spec` may be a Dispatcher instance (passed through, owned=False — the
     caller manages its lifetime), a spec string (``inline``, ``threads``,
-    ``threads:N``, ``sharded``, ``sharded:N``), or None, which reads the
-    ``STRETTO_DISPATCHER`` environment variable (default ``inline``).
-    Owned dispatchers are closed by run_plan when the plan finishes.
+    ``threads:N``, ``sharded``, ``sharded:N``, ``mesh``, ``mesh:N`` —
+    a bare ``mesh`` scatters over every local jax device), or None, which
+    reads the ``STRETTO_DISPATCHER`` environment variable (default
+    ``inline``). Owned dispatchers are closed by run_plan when the plan
+    finishes.
     """
     if spec is None:
         spec = effective_spec()
@@ -230,5 +329,8 @@ def resolve_dispatcher(spec=None) -> Tuple[Any, bool]:
     if kind == "sharded":
         return ShardedDispatcher(
             n if n is not None else _DEFAULT_SHARDS), True
+    if kind == "mesh":
+        return MeshDispatcher(n), True
     raise ValueError(f"unknown dispatcher spec {spec!r} "
-                     "(expected inline | threads[:N] | sharded[:N])")
+                     "(expected inline | threads[:N] | sharded[:N] "
+                     "| mesh[:N])")

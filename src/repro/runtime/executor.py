@@ -84,6 +84,14 @@ class StageStats:
     #                            a stage runs on exactly one engine, so
     #                            grouping stage rows by this field yields
     #                            exact per-engine cost / KV-bytes totals
+    h2d_overlap_s: float = 0.0  # H2D transfer time hidden behind decode
+    #                            compute by the engine's async prefetch —
+    #                            time that WOULD have serialized with
+    #                            wall_s but did not (counted per flush on
+    #                            the dispatching thread, like kv_bytes)
+    donated_bytes: int = 0     # bytes of consumed KV cache buffers the
+    #                            jitted decode donated back to XLA
+    #                            (donate_argnums) instead of holding live
 
     @property
     def mean_batch(self) -> float:
@@ -97,6 +105,8 @@ class StageStats:
         self.n_tuples += n_scored
         self.n_batches += 1
         self.kv_bytes += out.kv_bytes
+        self.h2d_overlap_s += out.h2d_overlap_s
+        self.donated_bytes += out.donated_bytes
         if out.uses_llm:
             self.n_llm_calls += n_scored
 
@@ -110,11 +120,14 @@ class StageStats:
         self.n_llm_calls += other.n_llm_calls
         self.kv_bytes += other.kv_bytes
         self.n_batches += other.n_batches
+        self.h2d_overlap_s += other.h2d_overlap_s
+        self.donated_bytes += other.donated_bytes
 
     def copy(self) -> "StageStats":
         return StageStats(self.op_name, self.logical_idx, self.stage,
                           self.wall_s, self.n_tuples, self.n_llm_calls,
-                          self.kv_bytes, self.n_batches, self.engine)
+                          self.kv_bytes, self.n_batches, self.engine,
+                          self.h2d_overlap_s, self.donated_bytes)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"op_name": self.op_name, "logical_idx": self.logical_idx,
@@ -122,6 +135,8 @@ class StageStats:
                 "wall_s": self.wall_s,
                 "n_tuples": self.n_tuples, "n_llm_calls": self.n_llm_calls,
                 "kv_bytes": self.kv_bytes, "n_batches": self.n_batches,
+                "h2d_overlap_s": self.h2d_overlap_s,
+                "donated_bytes": self.donated_bytes,
                 "mean_batch": round(self.mean_batch, 2)}
 
 
@@ -216,6 +231,8 @@ class _OperatorOutcome:
     wall_s: float
     kv_bytes: int
     uses_llm: bool
+    h2d_overlap_s: float = 0.0
+    donated_bytes: int = 0
 
 
 def run_operator(backend: Backend, op, op_name: str,
@@ -229,6 +246,11 @@ def run_operator(backend: Backend, op, op_name: str,
     """
     phys = backend.resolve(op, op_name)
     kv0 = backend.kv_bytes_loaded()
+    # transfer telemetry is optional on the Backend protocol: serving
+    # backends expose (h2d_overlap_s, donated_bytes) per calling thread,
+    # oracle/custom backends simply have no transfers to report
+    xfer = getattr(backend, "transfer_stats", None)
+    x0 = xfer() if xfer is not None else (0.0, 0)
     t0 = time.perf_counter()
     if isinstance(op, SemFilter):
         scores = backend.score_filter(op, op_name, items)
@@ -236,10 +258,12 @@ def run_operator(backend: Backend, op, op_name: str,
     else:
         values, scores = backend.run_map(op, op_name, items)
     wall = time.perf_counter() - t0
+    x1 = xfer() if xfer is not None else (0.0, 0)
     return _OperatorOutcome(
         scores=scores, values=values, wall_s=wall,
         kv_bytes=backend.kv_bytes_loaded() - kv0,
-        uses_llm=bool(getattr(phys, "uses_llm", True)))
+        uses_llm=bool(getattr(phys, "uses_llm", True)),
+        h2d_overlap_s=x1[0] - x0[0], donated_bytes=x1[1] - x0[1])
 
 
 class _CascadeState:
@@ -653,9 +677,12 @@ def _stream_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     parity guarantee), so each shard can stream through the full cascade
     independently; only the per-shard bool decision arrays are merged back
     into corpus order and the StageStats summed. A shard is the natural
-    unit to place on a jax mesh axis or a separate host process; this
-    implementation fans shards out on a thread pool over one shared
-    engine. One PartitionResult is emitted per shard once the scatter
+    unit to place on a jax mesh axis or a separate host process: shards
+    fan out on a thread pool over one shared engine, and a dispatcher
+    that exposes ``shard_context`` (MeshDispatcher) additionally pins
+    each shard's engine state + computation onto its own device slice of
+    a jax mesh for the duration of that shard's streaming pass. One
+    PartitionResult is emitted per shard once the scatter
     completes (shards finish in parallel, so finer-grained emission would
     not be in corpus order anyway); each carries its shard's full
     per-stage StageStats, so the per-partition deltas still sum to the
@@ -676,9 +703,15 @@ def _stream_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     map_lis = [li for li, op in enumerate(sem_ops)
                if isinstance(op, SemMap)]
 
-    def one_shard(lo: int, hi: int) -> RuntimeResult:
-        return _run_streaming(plan, query, items[lo:hi], backend,
-                              partition_size, coalesce, inline)
+    shard_ctx = getattr(disp, "shard_context", None)
+
+    def one_shard(i: int, lo: int, hi: int) -> RuntimeResult:
+        if shard_ctx is None:
+            return _run_streaming(plan, query, items[lo:hi], backend,
+                                  partition_size, coalesce, inline)
+        with shard_ctx(i, backend):
+            return _run_streaming(plan, query, items[lo:hi], backend,
+                                  partition_size, coalesce, inline)
 
     shards = disp.map_shards(one_shard, bounds)
 

@@ -23,15 +23,36 @@ The decode path is the Pallas fast path:
     STRETTO_DEVICE_CACHE). Device-cache hits do NOT increment the
     kv_bytes telemetry — it counts real loads only.
 
+Transfers overlap compute (`async_h2d` ctor arg, else STRETTO_ASYNC_H2D):
+a multi-batch run_filter/run_map dispatches the decode for batch i and
+loads + H2D-copies batch i+1's KV caches *before* forcing batch i's
+logits, so the transfer hides behind the accelerator's decode — the
+hidden time is counted into the `h2d_overlap_s` telemetry. On the same
+flag (and only when the device-resident LRU is off, which would need the
+buffers again) the jitted decode donates the consumed cache buffers back
+to XLA via donate_argnums, so the next batch's caches can reuse that HBM
+instead of peaking at 2x; donated bytes are counted into
+`donated_bytes`. Both counters are kept globally and per thread
+(`transfer_stats_local`), so the runtime's per-flush StageStats deltas
+stay exact under concurrent dispatch.
+
+Multi-device placement: `place_on(device)` pins the calling thread's
+flushes — params (device_put once per device, memoized) and decode
+computation — onto one device; `default_device` (EngineSpec placement)
+does the same engine-wide. The runtime's MeshDispatcher enters
+`place_on` per corpus shard to scatter the cascade over a jax mesh.
+
 Batch size is memory-bounded: higher compression -> smaller caches ->
 larger batches -> fewer calls (the paper's batching speedup mechanism).
 """
 from __future__ import annotations
 
+import contextlib
 import math
 import os
 import threading
 import time
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -39,6 +60,13 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# CPU (and some accelerator) buffers cannot always be donated; jax warns
+# per compilation. Donation here is best-effort HBM reuse — a backend
+# that cannot honor it silently falls back to copying, which is exactly
+# the pre-donation behavior, so the warning is noise in CPU CI runs.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 from repro.cache.compression import (QueryStats, calibrate_query_stats,
                                      compress_item_cache, quantize_kv)
@@ -77,7 +105,8 @@ class ServingEngine:
                  max_batch: int = 128,
                  kernels: Optional[str] = None,
                  fused: Optional[bool] = None,
-                 device_cache: Optional[bool] = None):
+                 device_cache: Optional[bool] = None,
+                 async_h2d: Optional[bool] = None):
         self.store = store
         self.models: Dict[str, EngineModel] = {}
         self.memory_budget = memory_budget_bytes
@@ -90,7 +119,25 @@ class ServingEngine:
                       else bool(fused))
         self.device_cache = (_env_flag("STRETTO_DEVICE_CACHE")
                              if device_cache is None else bool(device_cache))
-        self._decode_jit: Dict[Tuple[str, bool, str], Any] = {}
+        self.async_h2d = (_env_flag("STRETTO_ASYNC_H2D")
+                          if async_h2d is None else bool(async_h2d))
+        self._decode_jit: Dict[Tuple[str, bool, str, bool], Any] = {}
+        # engine-wide device pin (EngineSpec(device=...)); place_on()
+        # overrides it per thread (MeshDispatcher shard placement)
+        self.default_device: Optional[Any] = None
+        self._placement_tl = threading.local()
+        # params placed per device, once: (model_name, device id) ->
+        # device_put params pytree
+        self._placed_params: Dict[Tuple[str, Any], Any] = {}
+        self._placed_lock = threading.Lock()
+        # transfer telemetry: H2D time hidden behind decode + donated KV
+        # bytes — global totals and per-thread counters (the runtime's
+        # StageStats deltas read the thread-local pair, so overlapping
+        # flushes never interleave into each other's deltas)
+        self.h2d_overlap_s = 0.0
+        self.donated_bytes = 0
+        self._xfer_lock = threading.Lock()
+        self._xfer_tl = threading.local()
         # device-resident profile cache: (profile.tag, ids, headroom) ->
         # (cache pytree on device, nbytes). One lock serializes
         # lookup-or-load so concurrent flushes of the same key load once
@@ -105,6 +152,64 @@ class ServingEngine:
         # attention decode dispatches issued (1 per fused flush,
         # len(query) per scan flush)
         self.attn_dispatches = 0
+
+    # ---------------- placement + transfer telemetry ----------------
+
+    @contextlib.contextmanager
+    def place_on(self, device, sharding=None):
+        """Pin this thread's flushes onto `device`: params are device_put
+        there (once, memoized) and the decode computation runs there.
+        `sharding` optionally carries a NamedSharding for the params
+        (resolved through the logical-axis rules); default is plain
+        single-device placement. Nests/restores like a context var."""
+        tl = self._placement_tl
+        prev = getattr(tl, "placement", None)
+        tl.placement = (device, sharding)
+        try:
+            yield
+        finally:
+            tl.placement = prev
+
+    def _placement(self) -> Optional[Tuple[Any, Any]]:
+        got = getattr(self._placement_tl, "placement", None)
+        if got is not None:
+            return got
+        if self.default_device is not None:
+            return (self.default_device, None)
+        return None
+
+    def _device_ctx(self, placement):
+        return (contextlib.nullcontext() if placement is None
+                else jax.default_device(placement[0]))
+
+    def _params_for(self, em: EngineModel, model_name: str, placement):
+        """The model params on the placement's device (device_put once
+        per (model, device); unplaced engines use the params as-is)."""
+        if placement is None:
+            return em.params
+        dev, sharding = placement
+        key = (model_name, getattr(dev, "id", dev))
+        with self._placed_lock:
+            got = self._placed_params.get(key)
+            if got is None:
+                got = jax.device_put(
+                    em.params, sharding if sharding is not None else dev)
+                self._placed_params[key] = got
+            return got
+
+    def _count_xfer(self, h2d_s: float = 0.0, donated: int = 0):
+        tl = self._xfer_tl
+        tl.h2d_s = getattr(tl, "h2d_s", 0.0) + h2d_s
+        tl.donated = getattr(tl, "donated", 0) + donated
+        with self._xfer_lock:
+            self.h2d_overlap_s += h2d_s
+            self.donated_bytes += donated
+
+    def transfer_stats_local(self) -> Tuple[float, int]:
+        """Monotonic (h2d_overlap_s, donated_bytes) for the calling
+        thread — the runtime's run_operator takes before/after deltas."""
+        tl = self._xfer_tl
+        return (getattr(tl, "h2d_s", 0.0), getattr(tl, "donated", 0))
 
     # ---------------- offline phase ----------------
 
@@ -188,8 +293,9 @@ class ServingEngine:
                                item_ids[0], quant=profile.quant)
         return min(b, len(item_ids))
 
-    def _decode_fn(self, model_name: str, fused: bool, backend: str):
-        key = (model_name, fused, backend)
+    def _decode_fn(self, model_name: str, fused: bool, backend: str,
+                   donate: bool = False):
+        key = (model_name, fused, backend, donate)
         if key not in self._decode_jit:
             em = self.models[model_name]
 
@@ -211,7 +317,12 @@ class ServingEngine:
                         step, cache, jnp.moveaxis(tokens, 1, 0))
                     return logits_seq[-1], cache
 
-            self._decode_jit[key] = jax.jit(run_tokens)
+            # donate the consumed cache buffers (arg 1) so XLA reuses
+            # their HBM for the next batch instead of peaking at 2x —
+            # only ever requested when nothing else holds the buffers
+            # (device-resident LRU off, prefetched caches used once)
+            self._decode_jit[key] = jax.jit(
+                run_tokens, donate_argnums=(1,) if donate else ())
         return self._decode_jit[key]
 
     def device_cache_clear(self):
@@ -250,23 +361,70 @@ class ServingEngine:
                 self._dev_bytes -= old_bytes
             return cache
 
-    def _flush(self, em: EngineModel, profile: Profile, ids: List[int],
-               query_tokens: Sequence[int], bs: int):
-        """One decode flush: load (or device-cache-hit) the batch's
-        caches, run the query, return logits (len(ids) rows)."""
+    def _load_for(self, em: EngineModel, profile: Profile, ids: List[int],
+                  query_tokens: Sequence[int], bs: int):
+        """Load (or device-cache-hit) one flush batch's caches — the same
+        padded shape `_flush` would load, so a prefetched cache slots in
+        as `preloaded` bit-for-bit."""
         # shape-bucketed batches, capped so padding never exceeds the
         # memory-bounded batch size
         pad = max(0, min(_bucket(len(ids)), bs) - len(ids))
+        return self._load_cached(em, profile, ids + ids[:1] * pad,
+                                 headroom=len(query_tokens) + 2,
+                                 n_real=len(ids))
+
+    def _flush(self, em: EngineModel, profile: Profile, ids: List[int],
+               query_tokens: Sequence[int], bs: int, preloaded=None):
+        """One decode flush: load (or device-cache-hit, or take the
+        prefetched) caches, run the query, return logits (len(ids) rows,
+        NOT yet forced to host — callers np.asarray when they consume,
+        which is what lets the next batch's H2D hide behind the decode)."""
+        pad = max(0, min(_bucket(len(ids)), bs) - len(ids))
         fused = self.fused and supports_fused_decode(em.cfg)
         backend = KOPS.resolve_backend(self.kernels)
-        fn = self._decode_fn(profile.model_name, fused, backend)
-        cache = self._load_cached(em, profile, ids + ids[:1] * pad,
-                                  headroom=len(query_tokens) + 2,
-                                  n_real=len(ids))
-        q = jnp.asarray([list(query_tokens)] * (len(ids) + pad), jnp.int32)
-        logits, _ = fn(em.params, cache, q)
+        # donation needs exclusive ownership of the cache buffers: the
+        # device-resident LRU would hand the same buffers to the next hit
+        donate = self.async_h2d and not self.device_cache
+        fn = self._decode_fn(profile.model_name, fused, backend, donate)
+        placement = self._placement()
+        with self._device_ctx(placement):
+            cache = preloaded if preloaded is not None else \
+                self._load_for(em, profile, ids, query_tokens, bs)
+            donated = sum(v.nbytes for v in cache.values()
+                          if hasattr(v, "nbytes")) if donate else 0
+            params = self._params_for(em, profile.model_name, placement)
+            q = jnp.asarray([list(query_tokens)] * (len(ids) + pad),
+                            jnp.int32)
+            logits, _ = fn(params, cache, q)
+        if donated:
+            self._count_xfer(donated=donated)
         self.attn_dispatches += 1 if fused else len(query_tokens)
         return logits[:len(ids)]
+
+    def _iter_flushes(self, em: EngineModel, profile: Profile,
+                      item_ids: Sequence[int], query_tokens: Sequence[int],
+                      bs: int):
+        """Yield (start, ids, logits) per flush batch. With `async_h2d`
+        and more than one batch, batch i+1's caches are loaded (npz read
+        + pad + H2D copy) right after batch i's decode is *dispatched*
+        and before its logits are forced — the consumer's np.asarray
+        blocks on the decode while the transfer proceeds, so the load
+        time counted into h2d_overlap_s is hidden from wall_s."""
+        batches = [(s, list(item_ids[s:s + bs]))
+                   for s in range(0, len(item_ids), bs)]
+        prefetch = self.async_h2d and len(batches) > 1
+        pre = None
+        for bi, (s, ids) in enumerate(batches):
+            logits = self._flush(em, profile, ids, query_tokens, bs,
+                                 preloaded=pre)
+            pre = None
+            if prefetch and bi + 1 < len(batches):
+                nxt = batches[bi + 1][1]
+                t0 = time.perf_counter()
+                with self._device_ctx(self._placement()):
+                    pre = self._load_for(em, profile, nxt, query_tokens, bs)
+                self._count_xfer(h2d_s=time.perf_counter() - t0)
+            yield s, ids, logits
 
     def run_filter(self, model_name: str, profile_ratio: float,
                    item_ids: Sequence[int], query_tokens: Sequence[int],
@@ -277,9 +435,8 @@ class ServingEngine:
         profile = Profile(model_name, profile_ratio, quant)
         out = np.zeros(len(item_ids), np.float32)
         bs = self._batch_size(profile, item_ids)
-        for s in range(0, len(item_ids), bs):
-            ids = list(item_ids[s:s + bs])
-            logits = self._flush(em, profile, ids, query_tokens, bs)
+        for s, ids, logits in self._iter_flushes(em, profile, item_ids,
+                                                 query_tokens, bs):
             lo = np.asarray(logits[:, yes_token] - logits[:, no_token],
                             np.float32)
             out[s:s + len(ids)] = lo
@@ -296,9 +453,8 @@ class ServingEngine:
         confs = np.zeros(len(item_ids), np.float32)
         bs = self._batch_size(profile, item_ids)
         vt = jnp.asarray(list(value_tokens))
-        for s in range(0, len(item_ids), bs):
-            ids = list(item_ids[s:s + bs])
-            logits = self._flush(em, profile, ids, query_tokens, bs)
+        for s, ids, logits in self._iter_flushes(em, profile, item_ids,
+                                                 query_tokens, bs):
             vlogits = logits[:, vt]                        # (B, n_vals)
             top2 = jax.lax.top_k(vlogits, 2)[0]
             vals[s:s + len(ids)] = np.asarray(vt[jnp.argmax(vlogits, -1)])

@@ -4,6 +4,7 @@ exactly once per stage it reaches, for any partition size, coalesce width
 and dispatcher. Uses pure-python recording operators so flush membership
 is observable and scores are bit-exact under any batch grouping."""
 import threading
+import typing
 
 import numpy as np
 import pytest
@@ -12,9 +13,9 @@ from hypothesis_compat import given, settings, st
 from repro.core import Query, RelFilter, SemFilter, SemMap
 from repro.core.physical import (PhysicalOperator, PhysicalPlan,
                                  PhysicalPlanStage)
-from repro.runtime import (InlineDispatcher, ShardedDispatcher,
-                           ThreadPoolDispatcher, as_backend,
-                           resolve_dispatcher, run_plan)
+from repro.runtime import (InlineDispatcher, MeshDispatcher,
+                           ShardedDispatcher, ThreadPoolDispatcher,
+                           as_backend, resolve_dispatcher, run_plan)
 
 
 # ---------------------------------------------------------------------------
@@ -41,7 +42,7 @@ def test_resolve_specs():
 
 
 @pytest.mark.parametrize("spec", ["threads:0", "sharded:0", "threads:-2",
-                                  "sharded:-1"])
+                                  "sharded:-1", "mesh:0", "mesh:-3"])
 def test_resolve_rejects_nonpositive_counts(spec):
     """threads:0 / sharded:0 must raise, not silently coerce to the
     defaults — a zero-worker request is a config bug, and masking it
@@ -49,6 +50,20 @@ def test_resolve_rejects_nonpositive_counts(spec):
     under a zero-shard label."""
     with pytest.raises(ValueError, match="must be positive"):
         resolve_dispatcher(spec)
+
+
+def test_module_annotations_resolve():
+    """Regression: ThreadPoolDispatcher.__init__ annotates with
+    typing.Dict, which once wasn't imported — a latent NameError for any
+    typing.get_type_hints consumer. Resolving every annotation in the
+    module's public classes must not raise."""
+    hints = typing.get_type_hints(ThreadPoolDispatcher.__init__)
+    assert hints["engine_workers"] == typing.Optional[typing.Dict[str, int]]
+    for cls in (InlineDispatcher, ThreadPoolDispatcher, ShardedDispatcher,
+                MeshDispatcher):
+        typing.get_type_hints(cls.__init__)
+        typing.get_type_hints(cls.submit if hasattr(cls, "submit")
+                              else cls.map_shards)
 
 
 def test_resolve_env_default(monkeypatch):
@@ -164,7 +179,7 @@ def _expected_flushes(q, plan, items):
     return rr, {name: sorted(idx) for name, idx in log2.items()}
 
 
-DISPATCHERS = ["inline", "threads:3", "sharded:3", "sharded:1"]
+DISPATCHERS = ["inline", "threads:3", "sharded:3", "sharded:1", "mesh:2"]
 
 
 @pytest.mark.parametrize("dispatcher", DISPATCHERS)

@@ -320,6 +320,107 @@ def test_session_config_validates_kernels_backend():
     assert cfg.resolved_engines()[0].kernels == "interpret"
 
 
+# ---------------------------------------------------------------------------
+# async H2D overlap + donation
+# ---------------------------------------------------------------------------
+
+def test_async_h2d_identical_results_and_counters(engine):
+    """Transfer overlap is a schedule change, not a math change: with the
+    memory budget forcing a multi-batch flush, async_h2d=True must return
+    bit-identical logits while the engine's h2d_overlap_s (prefetch time
+    hidden behind decode) and donated_bytes (consumed KV buffers handed
+    back to XLA) counters both advance."""
+    eng, ds = engine
+    ids = _ids(ds, 24)
+    query = [filter_query_token(1)]
+    per_item = eng.store.item_nbytes(Profile("sm", 0.0))
+    budget0, flag0 = eng.memory_budget, eng.async_h2d
+    assert eng.async_h2d                           # overlap is on by default
+    try:
+        eng.memory_budget = 8 * per_item           # forces 3 flush batches
+        assert eng.max_batch_for("sm", 0.0) == 8
+        eng.async_h2d = False
+        base = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        eng.async_h2d = True
+        h0, d0 = eng.h2d_overlap_s, eng.donated_bytes
+        overlapped = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        np.testing.assert_array_equal(overlapped, base)
+        assert eng.h2d_overlap_s > h0              # prefetches were timed
+        assert eng.donated_bytes > d0              # consumed KV donated
+    finally:
+        eng.async_h2d = flag0
+        eng.memory_budget = budget0
+
+
+def test_async_h2d_single_batch_no_prefetch(engine):
+    """A corpus that fits one flush batch has no 'next cohort' to stage:
+    h2d_overlap_s must not move (nothing was overlapped), while donation
+    still returns the one consumed cache buffer."""
+    eng, ds = engine
+    ids = _ids(ds, 6)
+    query = [filter_query_token(2)]
+    flag0 = eng.async_h2d
+    try:
+        eng.async_h2d = True
+        h0, d0 = eng.h2d_overlap_s, eng.donated_bytes
+        eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        assert eng.h2d_overlap_s == h0
+        assert eng.donated_bytes > d0
+    finally:
+        eng.async_h2d = flag0
+
+
+def test_donation_disabled_with_device_cache(engine):
+    """The device LRU keeps references to cached KV buffers, so donating
+    them would hand XLA memory the cache later reuses — donation must be
+    gated off whenever device_cache is on, and cache hits must still
+    return identical results under async_h2d."""
+    eng, ds = engine
+    ids = _ids(ds, 8)
+    query = [filter_query_token(3)]
+    flag0 = eng.async_h2d
+    try:
+        eng.async_h2d = True
+        eng.device_cache = True
+        eng.device_cache_clear()
+        d0 = eng.donated_bytes
+        first = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        again = eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        np.testing.assert_array_equal(first, again)
+        assert eng.donated_bytes == d0             # never donated
+    finally:
+        eng.async_h2d = flag0
+        eng.device_cache = False
+        eng.device_cache_clear()
+
+
+def test_transfer_stats_thread_local(engine):
+    """The executor attributes h2d/donation deltas to the flush that
+    caused them via thread-scoped counters (a flush runs entirely on one
+    dispatcher thread) — an async run must advance the calling thread's
+    transfer_stats_local, and a fresh thread must start at zero."""
+    import threading
+
+    eng, ds = engine
+    ids = _ids(ds, 8)
+    query = [filter_query_token(1)]
+    flag0 = eng.async_h2d
+    try:
+        eng.async_h2d = True
+        t0 = eng.transfer_stats_local()
+        eng.run_filter("sm", 0.0, ids, query, TOK_YES, TOK_NO)
+        t1 = eng.transfer_stats_local()
+        assert t1[1] > t0[1]                       # this thread donated
+        seen = {}
+        th = threading.Thread(
+            target=lambda: seen.update(other=eng.transfer_stats_local()))
+        th.start()
+        th.join()
+        assert seen["other"] == (0.0, 0)           # not leaked cross-thread
+    finally:
+        eng.async_h2d = flag0
+
+
 def test_engine_loads_padded_to_kernel_block(engine):
     """Every engine load pads S to the Pallas block multiple so any
     backend's grid is legal."""
