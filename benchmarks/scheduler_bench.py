@@ -1,0 +1,198 @@
+"""Concurrent scheduler throughput smoke: sequential vs scheduled q/s.
+
+Runs K copies of one synthetic cascade query (sleep-backed operators
+whose flush cost mimics an accelerator-bound engine: fixed dispatch
+overhead plus per-tuple time) two ways against one Session:
+
+  sequential — K solo .execute() calls back to back
+  scheduled  — K queries admitted concurrently through QueryScheduler,
+               so their flushes coalesce into merged "engine" calls and
+               the fixed dispatch overhead amortizes across queries
+
+and records wall clock, queries/s, and the hub's merge counters
+(n_flushes folded into n_calls, saved_calls). Decisions must stay
+bit-identical between the two paths; with ``--gate`` it also exits
+non-zero when scheduled throughput fails to beat sequential by
+``--min-speedup`` — the existence proof that cross-query coalescing
+pays, not just that it parses.
+
+Artifact flow: the result dict merges into the newest BENCH_*.json in
+--out under a separate "scheduler" key (the kernels gate's per-row
+regression check only reads "rows", so these numbers never trip it), or
+a standalone BENCH file when no kernels artifact exists.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import Session  # noqa: E402
+from repro.core import PlannerConfig  # noqa: E402
+from repro.runtime import OracleBackend  # noqa: E402
+from repro.scheduler import QueryScheduler  # noqa: E402
+
+N_ITEMS = 384
+N_QUERIES = 6
+# flush cost model: fixed dispatch overhead + per-tuple decode time.
+# time.sleep releases the GIL; merging K flushes into one call pays the
+# fixed overhead once instead of K times, which is the effect measured.
+FIXED_S = 0.02
+PER_TUPLE_S = 0.00005
+
+
+class _Item:
+    __slots__ = ("item_id",)
+
+    def __init__(self, i: int):
+        self.item_id = i
+
+
+class _SleepFilter:
+    uses_llm = True
+
+    def __init__(self, name: str, gold: bool = False):
+        self.name = name
+        self.is_gold = gold
+
+    def run_filter(self, items: Sequence[_Item], op) -> np.ndarray:
+        time.sleep(FIXED_S + PER_TUPLE_S * len(items))
+        idx = np.asarray([it.item_id for it in items], np.float64)
+        return np.asarray(
+            3.0 * np.sin(idx * 12.9898 + op.task_id * 78.233), np.float32)
+
+    def run_map(self, items, op):
+        raise NotImplementedError
+
+
+def _registry(op):
+    return [_SleepFilter("sleep-cheap"), _SleepFilter("sleep-gold",
+                                                      gold=True)]
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "nogit"
+    except Exception:
+        return "nogit"
+
+
+def run_bench(n_queries: int = N_QUERIES) -> Dict:
+    sess = Session(backend=OracleBackend(_registry),
+                   planner=PlannerConfig(steps=40, restarts=1,
+                                         snapshots=2),
+                   sample_frac=0.25)
+    items = [_Item(i) for i in range(N_ITEMS)]
+    frame = (sess.frame(items)
+             .sem_filter("bench filter", task_id=1)
+             .with_guarantees(recall=0.7, precision=0.7))
+    frame.plan()                               # planning outside the clock
+
+    t0 = time.monotonic()
+    seq = [frame.execute() for _ in range(n_queries)]
+    seq_wall = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    with QueryScheduler(sess, max_concurrent=n_queries,
+                        paused=True) as sched:
+        handles = [sched.submit(frame) for _ in range(n_queries)]
+        sched.resume()
+        results = [h.result(timeout=300) for h in handles]
+        stats = sched.stats()
+    sched_wall = time.monotonic() - t0
+
+    parity = all(np.array_equal(r.accepted, seq[0].accepted)
+                 for r in results + seq)
+    return {
+        "name": "scheduler_concurrent_vs_sequential",
+        "n_queries": n_queries,
+        "n_items": N_ITEMS,
+        "sequential_wall_s": seq_wall,
+        "scheduled_wall_s": sched_wall,
+        "sequential_qps": n_queries / max(seq_wall, 1e-9),
+        "scheduled_qps": n_queries / max(sched_wall, 1e-9),
+        "speedup": seq_wall / max(sched_wall, 1e-9),
+        "parity": parity,
+        "n_flushes": stats["n_flushes"],
+        "n_calls": stats["n_calls"],
+        "n_merged_calls": stats["n_merged_calls"],
+        "saved_calls": stats["saved_calls"],
+    }
+
+
+def _emit_artifact(row: Dict, out_dir: str) -> str:
+    """Merge under "scheduler" into the newest BENCH_*.json (the same
+    artifact CI uploads), else write a standalone file."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
+    if paths:
+        path = paths[-1]
+        with open(path) as f:
+            artifact = json.load(f)
+        artifact["scheduler"] = row
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=1)
+        return path
+    ts = time.strftime("%Y%m%dT%H%M%SZ", time.gmtime())
+    path = os.path.join(out_dir, f"BENCH_{ts}-{_git_sha()}.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "stretto-scheduler-bench-v1", "ts": ts,
+                   "sha": _git_sha(), "scheduler": row}, f, indent=1)
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on a parity break or if scheduled "
+                         "throughput does not beat sequential")
+    ap.add_argument("--queries", type=int, default=N_QUERIES)
+    ap.add_argument("--out", default="results/bench",
+                    help="artifact directory (merges into the newest "
+                         "BENCH_*.json there)")
+    ap.add_argument("--min-speedup", type=float, default=1.3,
+                    help="--gate: min q/s speedup of scheduled over "
+                         "sequential")
+    args = ap.parse_args(argv)
+
+    row = run_bench(args.queries)
+    print(f"[scheduler] {row['n_queries']} queries x {row['n_items']} "
+          f"items: sequential {row['sequential_qps']:.2f} q/s, "
+          f"scheduled {row['scheduled_qps']:.2f} q/s "
+          f"({row['speedup']:.2f}x), {row['n_flushes']} flushes -> "
+          f"{row['n_calls']} calls ({row['saved_calls']} saved), "
+          f"parity={'ok' if row['parity'] else 'BROKEN'}")
+
+    failed = False
+    if not row["parity"]:
+        print("[scheduler] FAIL: scheduled decisions diverged from "
+              "sequential")
+        failed = True
+    if args.gate and row["speedup"] < args.min_speedup:
+        print(f"[scheduler] FAIL: speedup {row['speedup']:.2f}x < "
+              f"{args.min_speedup:.2f}x over sequential")
+        failed = True
+    if args.gate and row["saved_calls"] <= 0:
+        print("[scheduler] FAIL: no flushes were coalesced")
+        failed = True
+
+    path = _emit_artifact(row, args.out)
+    print(f"[scheduler] wrote {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

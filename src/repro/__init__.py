@@ -14,6 +14,8 @@ Layers:
                     (the single front door; compiles to the layers below)
   repro.core      — the paper's contribution (global optimizer + plan layer)
   repro.runtime   — streaming plan execution, backends, dispatch
+  repro.scheduler — concurrent query admission, cross-query flush
+                    coalescing, tiered tenants
   repro.models    — config-driven model zoo (10 assigned archs + paper arch)
   repro.cache     — KV-cache profiles (Expected-Attention compression ladder)
   repro.serving   — prefill-skip batched execution engine
@@ -36,6 +38,10 @@ _EXPORTS = {
     "QueryResult": "repro.api",
     "ResultStream": "repro.api",
     "PartitionResult": "repro.runtime",
+    "QueryScheduler": "repro.scheduler",
+    "QueryHandle": "repro.scheduler",
+    "SchedulerSaturated": "repro.scheduler",
+    "TenantSpec": "repro.scheduler",
     "MeasuredBatchStore": "repro.core",
     "PlannerConfig": "repro.core",
     "Query": "repro.core",

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import shutil
 import tempfile
+import threading
 import weakref
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -273,6 +274,13 @@ class SessionConfig:
     engines: Optional[Tuple[EngineSpec, ...]] = None
     gold_engine: Optional[str] = None
 
+    # tenants sharing the session under a QueryScheduler: TenantSpec
+    # entries (repro.scheduler) declaring tier / fair-share weight /
+    # keep-warm cache policy. None: scheduled sessions run every query
+    # under an implicit "default" standard tenant. Ignored outside
+    # Session.scheduler().
+    tenants: Optional[Tuple[Any, ...]] = None
+
     planner: Optional[PlannerConfig] = None
     sample_frac: float = 0.15
     seed: int = 0
@@ -302,6 +310,10 @@ class SessionConfig:
                 raise ValueError(
                     f"gold_engine {self.gold_engine!r} is not a declared "
                     f"engine (engines: {names})")
+        if self.tenants is not None:
+            from repro.scheduler.tenants import validate_tenants
+            object.__setattr__(self, "tenants",
+                               validate_tenants(self.tenants))
 
     def resolved_engines(self) -> Tuple[EngineSpec, ...]:
         """The engine pool this config declares. The legacy flat fields
@@ -361,6 +373,12 @@ class Session:
             config = replace(config, **overrides)
         self.config = config
         self._closed = False
+        # serializes the session's mutable memo state (plan/gold caches,
+        # profile preparation, corpus tokens, measured feedback) so the
+        # scheduler's concurrent query drivers can share one session.
+        # Reentrant: plan() takes it and calls prepare(), which takes it
+        # again. Execution itself (run_plan flushes) never holds it.
+        self._state_lock = threading.RLock()
         self._owned_cache_dirs: List[str] = []
         self._prepared: set = set()
         self._gold_cache: Dict[Any, RuntimeResult] = {}
@@ -526,14 +544,25 @@ class Session:
                           else ("obj", self._object_token(it)), lead))
         return (n, tuple(probe))
 
+    def corpus_key(self, items: Sequence[Any]) -> Tuple:
+        """The session's stable corpus fingerprint, thread-safe (the
+        scheduler keys per-tenant warm state on it)."""
+        with self._state_lock:
+            return self._corpus_key(items)
+
     def prepare(self, items: Sequence[Any],
                 ratios: Optional[Sequence[float]] = None) -> None:
         """Build KV-cache profiles for this corpus (offline phase), per
         engine at each engine's own ladder (`ratios` overrides every
-        ladder). Safe to call repeatedly — each (engine, corpus, ladder)
-        is built once."""
+        ladder). Safe to call repeatedly — and from concurrent scheduler
+        drivers — each (engine, corpus, ladder) is built once."""
         if not self.engines:
             return                      # backend-only session: nothing to do
+        with self._state_lock:
+            self._prepare_locked(items, ratios)
+
+    def _prepare_locked(self, items: Sequence[Any],
+                        ratios: Optional[Sequence[float]]) -> None:
         for spec in self.engine_specs:
             eng = self.engines.get(spec.name)
             if eng is None:
@@ -668,28 +697,30 @@ class Session:
         updated flush widths). When the session's MeasuredBatchStore
         holds telemetry, BatchHint is seeded from measured flush widths
         instead of the static coalesce default."""
-        self._ensure_prepared(items)
-        key = (self._corpus_key(items), tuple(query.nodes),
-               query.target_recall, query.target_precision,
-               self.measured.version if len(self.measured) else 0)
-        plan = self._plan_cache.get(key)
-        if plan is None:
-            cfg = self.config
-            plan = plan_query(
-                query, items, self.backend, cfg.planner,
-                sample_frac=cfg.sample_frac, seed=cfg.seed,
-                reorder=cfg.reorder,
-                coalesce=cfg.coalesce if cfg.coalesce is not None
-                else DEFAULT_COALESCE,
-                measured=self.measured if len(self.measured) else None)
-            self._plan_cache[key] = plan
-        return plan
+        with self._state_lock:
+            self._ensure_prepared(items)
+            key = (self._corpus_key(items), tuple(query.nodes),
+                   query.target_recall, query.target_precision,
+                   self.measured.version if len(self.measured) else 0)
+            plan = self._plan_cache.get(key)
+            if plan is None:
+                cfg = self.config
+                plan = plan_query(
+                    query, items, self.backend, cfg.planner,
+                    sample_frac=cfg.sample_frac, seed=cfg.seed,
+                    reorder=cfg.reorder,
+                    coalesce=cfg.coalesce if cfg.coalesce is not None
+                    else DEFAULT_COALESCE,
+                    measured=self.measured if len(self.measured) else None)
+                self._plan_cache[key] = plan
+            return plan
 
     def record_measured(self, result: RuntimeResult) -> None:
         """Feed a result's measured StageStats into the session's
         MeasuredBatchStore, so subsequent plan() calls price operators at
         the flush widths execution actually delivered."""
-        self.measured.record_result(result)
+        with self._state_lock:
+            self.measured.record_result(result)
 
     def run(self, plan: PhysicalPlan, query: Query, items: Sequence[Any],
             backend: Optional[Backend] = None, *, partition_size=_UNSET,
@@ -746,12 +777,21 @@ class Session:
         """The gold reference execution for `query` over `items` (every
         semantic op resolved by the reference backend's gold operator),
         memoized per (corpus, query nodes)."""
-        self._ensure_prepared(items)
-        key = (self._corpus_key(items), tuple(query.nodes))
-        got = self._gold_cache.get(key)
-        if got is None:
-            gold_plan = gold_plan_for(query, self.reference)
-            got = run_plan(gold_plan, query, items, self.reference,
-                           **self._exec_kwargs())
-            self._gold_cache[key] = got
-        return got
+        with self._state_lock:
+            self._ensure_prepared(items)
+            key = (self._corpus_key(items), tuple(query.nodes))
+            got = self._gold_cache.get(key)
+            if got is None:
+                gold_plan = gold_plan_for(query, self.reference)
+                got = run_plan(gold_plan, query, items, self.reference,
+                               **self._exec_kwargs())
+                self._gold_cache[key] = got
+            return got
+
+    def scheduler(self, **kwargs):
+        """Build a QueryScheduler admitting concurrent queries onto this
+        session (see repro.scheduler). Tenants default to the session
+        config's `tenants` tuple; keyword arguments are forwarded to the
+        QueryScheduler constructor."""
+        from repro.scheduler import QueryScheduler
+        return QueryScheduler(self, **kwargs)

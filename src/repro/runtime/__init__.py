@@ -38,6 +38,7 @@ _EXPORTS = {
     "stage_stats_by_engine": "repro.runtime.executor",
     "DEFAULT_COALESCE": "repro.runtime.dispatch",
     "FlushTask": "repro.runtime.dispatch",
+    "backend_engines": "repro.runtime.dispatch",
     "InlineDispatcher": "repro.runtime.dispatch",
     "ThreadPoolDispatcher": "repro.runtime.dispatch",
     "ShardedDispatcher": "repro.runtime.dispatch",

@@ -33,6 +33,7 @@ keeps working while routing through the single runtime execution path.
 """
 from __future__ import annotations
 
+import threading
 from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
                     Tuple, runtime_checkable)
 
@@ -87,20 +88,34 @@ class RegistryBackend:
         self._registry = registry
         self._cache: Dict[Any, List[PhysicalOperator]] = {}
         self._by_name: Dict[Any, PhysicalOperator] = {}
+        # candidate/name resolution is memoized; the scheduler's query
+        # drivers resolve concurrently, so the build-on-miss must be
+        # serialized (RLock: a registry callable may itself resolve —
+        # PoolBackend's union walks member candidates)
+        self._resolve_lock = threading.RLock()
 
     def candidates(self, op) -> List[PhysicalOperator]:
-        if op not in self._cache:
-            self._cache[op] = list(self._registry(op))
-        return self._cache[op]
+        got = self._cache.get(op)
+        if got is None:
+            with self._resolve_lock:
+                got = self._cache.get(op)
+                if got is None:
+                    got = list(self._registry(op))
+                    self._cache[op] = got
+        return got
 
     def resolve(self, op, op_name: str) -> PhysicalOperator:
         got = self._by_name.get((op, op_name))
         if got is not None:
             return got
-        for phys in self.candidates(op):
-            if phys.name == op_name:
-                self._by_name[(op, op_name)] = phys
-                return phys
+        with self._resolve_lock:
+            got = self._by_name.get((op, op_name))
+            if got is not None:
+                return got
+            for phys in self.candidates(op):
+                if phys.name == op_name:
+                    self._by_name[(op, op_name)] = phys
+                    return phys
         raise KeyError(f"backend {self.name!r} has no operator {op_name!r} "
                        f"for {op}")
 

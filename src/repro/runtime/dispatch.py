@@ -146,17 +146,27 @@ class ThreadPoolDispatcher:
         total = self.n_workers + sum(self.engine_workers.values())
         self.max_pending = 2 * total
         self._pools: Dict[str, ThreadPoolExecutor] = {}
+        self._lock = threading.Lock()
+        self._closed = False
 
     def _pool_for(self, engine: str) -> ThreadPoolExecutor:
         key = engine if engine in self.engine_workers else ""
-        pool = self._pools.get(key)
-        if pool is None:
-            workers = self.engine_workers.get(key, self.n_workers)
-            pool = ThreadPoolExecutor(
-                max_workers=workers,
-                thread_name_prefix=f"stretto-flush-{key or 'shared'}")
-            self._pools[key] = pool
-        return pool
+        with self._lock:
+            if self._closed:
+                # without this check a submit racing close() would
+                # silently respawn a fresh pool that nothing ever shuts
+                # down (close already ran) — fail loudly instead
+                raise RuntimeError(
+                    "ThreadPoolDispatcher is closed; flushes can no "
+                    "longer be submitted")
+            pool = self._pools.get(key)
+            if pool is None:
+                workers = self.engine_workers.get(key, self.n_workers)
+                pool = ThreadPoolExecutor(
+                    max_workers=workers,
+                    thread_name_prefix=f"stretto-flush-{key or 'shared'}")
+                self._pools[key] = pool
+            return pool
 
     def submit(self, task: FlushTask,
                runner: Callable[[FlushTask], Any]) -> Future:
@@ -164,9 +174,19 @@ class ThreadPoolDispatcher:
             runner, task)
 
     def close(self):
-        for pool in self._pools.values():
+        """Idempotent and safe under concurrent submitters: the first
+        close wins (later calls return immediately), pools are shut down
+        outside the lock (a shutdown waits for running flushes, which
+        must not block new submitters from getting their clear
+        submit-after-close error), and any submit that loses the race
+        raises instead of leaking an orphan pool."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            pools, self._pools = dict(self._pools), {}
+        for pool in pools.values():
             pool.shutdown(wait=True)
-        self._pools.clear()
 
 
 class ShardedDispatcher:
@@ -181,6 +201,7 @@ class ShardedDispatcher:
                  n_workers: Optional[int] = None):
         self.n_shards = max(int(n_shards), 1)
         self.n_workers = max(int(n_workers or self.n_shards), 1)
+        self._closed = False
 
     def shard_bounds(self, n_items: int) -> List[Tuple[int, int]]:
         """Contiguous [lo, hi) shard ranges covering the corpus."""
@@ -194,6 +215,10 @@ class ShardedDispatcher:
         """Run ``fn(shard_idx, lo, hi)`` for every shard; the index lets
         dispatchers with per-shard placement (MeshDispatcher) route each
         shard onto its own device slice."""
+        if self._closed:
+            raise RuntimeError(
+                f"{type(self).__name__} is closed; shards can no longer "
+                f"be scattered")
         if len(bounds) <= 1 or self.n_workers <= 1:
             return [fn(i, lo, hi) for i, (lo, hi) in enumerate(bounds)]
         with ThreadPoolExecutor(max_workers=self.n_workers,
@@ -203,7 +228,9 @@ class ShardedDispatcher:
             return [f.result() for f in futs]
 
     def close(self):
-        pass
+        # idempotent: per-scatter pools are context-managed inside
+        # map_shards, so closing only has to fence future scatters
+        self._closed = True
 
 
 def backend_engines(backend) -> List[Any]:

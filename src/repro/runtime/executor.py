@@ -92,6 +92,13 @@ class StageStats:
     donated_bytes: int = 0     # bytes of consumed KV cache buffers the
     #                            jitted decode donated back to XLA
     #                            (donate_argnums) instead of holding live
+    shared_batches: int = 0    # flushes of this stage that executed as
+    #                            part of a merged cross-query engine call
+    #                            (scheduler coalescing) — 0 for solo runs
+    shared_width: int = 0      # total tuples of those merged calls (all
+    #                            participating queries' segments), so
+    #                            shared_width / shared_batches is the
+    #                            mean coalesced batch this query rode in
 
     @property
     def mean_batch(self) -> float:
@@ -107,6 +114,9 @@ class StageStats:
         self.kv_bytes += out.kv_bytes
         self.h2d_overlap_s += out.h2d_overlap_s
         self.donated_bytes += out.donated_bytes
+        if out.merged_queries > 1:
+            self.shared_batches += 1
+            self.shared_width += out.merged_width
         if out.uses_llm:
             self.n_llm_calls += n_scored
 
@@ -122,12 +132,15 @@ class StageStats:
         self.n_batches += other.n_batches
         self.h2d_overlap_s += other.h2d_overlap_s
         self.donated_bytes += other.donated_bytes
+        self.shared_batches += other.shared_batches
+        self.shared_width += other.shared_width
 
     def copy(self) -> "StageStats":
         return StageStats(self.op_name, self.logical_idx, self.stage,
                           self.wall_s, self.n_tuples, self.n_llm_calls,
                           self.kv_bytes, self.n_batches, self.engine,
-                          self.h2d_overlap_s, self.donated_bytes)
+                          self.h2d_overlap_s, self.donated_bytes,
+                          self.shared_batches, self.shared_width)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"op_name": self.op_name, "logical_idx": self.logical_idx,
@@ -137,6 +150,8 @@ class StageStats:
                 "kv_bytes": self.kv_bytes, "n_batches": self.n_batches,
                 "h2d_overlap_s": self.h2d_overlap_s,
                 "donated_bytes": self.donated_bytes,
+                "shared_batches": self.shared_batches,
+                "shared_width": self.shared_width,
                 "mean_batch": round(self.mean_batch, 2)}
 
 
@@ -233,6 +248,12 @@ class _OperatorOutcome:
     uses_llm: bool
     h2d_overlap_s: float = 0.0
     donated_bytes: int = 0
+    # cross-query coalescing provenance (scheduler FlushHub): when this
+    # outcome is one query's slice of a merged engine call, merged_width
+    # is the merged call's total tuple count and merged_queries how many
+    # distinct queries rode in it. Solo flushes keep (0, 1).
+    merged_width: int = 0
+    merged_queries: int = 1
 
 
 def run_operator(backend: Backend, op, op_name: str,

@@ -1,0 +1,48 @@
+"""Concurrent query scheduler: admit many SemFrame queries onto one
+Session/engine pool with cross-query flush coalescing and tiered
+tenants. See scheduler.py (admission + fairness + tiers), hub.py
+(coalescing seam), tenants.py (TenantSpec tiers).
+
+Lazy exports (PEP 562): repro.api.session imports tenants from here for
+SessionConfig validation; importing scheduler.py eagerly would close an
+import cycle back through repro.api.
+"""
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "QueryScheduler": "repro.scheduler.scheduler",
+    "QueryHandle": "repro.scheduler.scheduler",
+    "QueryTelemetry": "repro.scheduler.scheduler",
+    "SchedulerSaturated": "repro.scheduler.scheduler",
+    "FlushHub": "repro.scheduler.hub",
+    "QueryDispatcher": "repro.scheduler.hub",
+    "split_ints": "repro.scheduler.hub",
+    "TenantSpec": "repro.scheduler.tenants",
+    "TIERS": "repro.scheduler.tenants",
+    "validate_tenants": "repro.scheduler.tenants",
+}
+
+__all__ = sorted(_EXPORTS)
+
+if TYPE_CHECKING:    # static importers see the real names
+    from repro.scheduler.hub import (FlushHub, QueryDispatcher,  # noqa
+                                     split_ints)
+    from repro.scheduler.scheduler import (QueryHandle,  # noqa
+                                           QueryScheduler,
+                                           QueryTelemetry,
+                                           SchedulerSaturated)
+    from repro.scheduler.tenants import (TIERS, TenantSpec,  # noqa
+                                         validate_tenants)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return __all__

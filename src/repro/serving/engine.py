@@ -330,6 +330,62 @@ class ServingEngine:
             self._dev_cache.clear()
             self._dev_bytes = 0
 
+    def warm(self, model_name: str, ratio: float, item_ids: Sequence[int],
+             query_len: int = 1, quant: bool = False) -> int:
+        """Pre-stage a profile's flush batches in the device-resident LRU
+        (scheduler keep_warm tenants): loads each memory-bounded batch of
+        `item_ids` through the same `_load_for` path a flush would take,
+        so subsequent flushes over the same id runs hit the LRU instead
+        of reloading + H2D-copying. `query_len` must match the operator
+        query length the flushes will use (semantic filter/map operators
+        send a single query token). Returns the number of batches staged;
+        a no-op (0) when the device cache is off, the model is unknown,
+        or the profile has no stored shards yet — warming is best-effort
+        and never a correctness dependency."""
+        if not self.device_cache or model_name not in self.models \
+                or not item_ids:
+            return 0
+        em = self.models[model_name]
+        profile = Profile(model_name, ratio, quant)
+        if self.store.item_nbytes(profile, item_ids[0]) is None:
+            return 0                     # profile not built yet
+        ids = list(item_ids)
+        bs = self._batch_size(profile, ids)
+        query_tokens = [0] * max(int(query_len), 1)
+        n = 0
+        for s in range(0, len(ids), bs):
+            with self._device_ctx(self._placement()):
+                self._load_for(em, profile, ids[s:s + bs], query_tokens, bs)
+            n += 1
+        return n
+
+    def evict(self, model_name: Optional[str] = None,
+              ratio: Optional[float] = None,
+              quant: bool = False) -> int:
+        """Drop device-LRU entries for a profile (scheduler cold-tier
+        release): `model_name=None` clears everything, `ratio=None`
+        drops every rung of the model, otherwise exactly the
+        (model, ratio, quant) profile. Returns entries dropped. Only the
+        device-resident copies go — the on-disk profiles are untouched,
+        so the next flush simply reloads."""
+        with self._dev_lock:
+            if model_name is None:
+                n = len(self._dev_cache)
+                self._dev_cache.clear()
+                self._dev_bytes = 0
+                return n
+            if ratio is None:
+                prefix = f"{model_name}__r"
+                keys = [k for k in self._dev_cache
+                        if k[0].startswith(prefix)]
+            else:
+                tag = Profile(model_name, ratio, quant).tag
+                keys = [k for k in self._dev_cache if k[0] == tag]
+            for k in keys:
+                _, nbytes = self._dev_cache.pop(k)
+                self._dev_bytes -= nbytes
+            return len(keys)
+
     def _load_cached(self, em: EngineModel, profile: Profile,
                      ids: Sequence[int], headroom: int, n_real: int):
         """load_batch through the device-resident LRU (kv_bytes counts

@@ -223,3 +223,83 @@ def _check_flush_invariants(n, part, coalesce, dispatcher):
     dead = {it.idx for it in items if it.row["grp"] == 0}
     for name, idx in log.items():
         assert not dead & set(idx)
+
+
+# ---------------------------------------------------------------------------
+# close() lifecycle: idempotent, and safe under concurrent submitters
+# ---------------------------------------------------------------------------
+
+def _noop_task():
+    from repro.runtime.dispatch import FlushTask
+    return FlushTask(0, SemFilter("f", 1), "f-cheap", [_Item(0)])
+
+
+def test_threadpool_close_idempotent():
+    d = ThreadPoolDispatcher(2)
+    h = d.submit(_noop_task(), lambda t: len(t.items))
+    assert h.result() == 1
+    d.close()
+    d.close()                                   # second close: no-op
+
+
+def test_threadpool_submit_after_close_raises():
+    """Submitting after close must raise a clear error, not spin up an
+    orphan worker pool that nothing will ever shut down (the old
+    behavior) or hang the submitter."""
+    d = ThreadPoolDispatcher(2)
+    d.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        d.submit(_noop_task(), lambda t: len(t.items))
+
+
+def test_threadpool_concurrent_close_and_submit():
+    """Racing close() against submitters from other threads: every
+    submit either completes normally or raises RuntimeError — nothing
+    hangs, and a double close from two threads is safe."""
+    for _ in range(10):
+        d = ThreadPoolDispatcher(2)
+        errs, done = [], []
+        lock = threading.Lock()
+
+        def _submitter():
+            try:
+                h = d.submit(_noop_task(), lambda t: len(t.items))
+                r = h.result()
+                with lock:
+                    done.append(r)
+            except RuntimeError as e:
+                with lock:
+                    errs.append(e)
+
+        threads = [threading.Thread(target=_submitter) for _ in range(4)]
+        threads += [threading.Thread(target=d.close) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+            assert not t.is_alive(), "close/submit race hung"
+        assert len(done) + len(errs) == 4
+        assert all(r == 1 for r in done)
+        # losers of the race get a clear error: either the dispatcher's
+        # own message or the pool's shutdown refusal (a submit can grab
+        # a pool just before close() shuts it down)
+        assert all("closed" in str(e) or "shutdown" in str(e)
+                   for e in errs)
+
+
+def test_sharded_close_idempotent_and_rejects_after():
+    d = ShardedDispatcher(2)
+    bounds = d.shard_bounds(4)
+    assert d.map_shards(lambda i, lo, hi: hi - lo, bounds) == [2, 2]
+    d.close()
+    d.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        d.map_shards(lambda i, lo, hi: hi - lo, bounds)
+
+
+def test_mesh_close_idempotent_and_rejects_after():
+    d = MeshDispatcher(2)
+    d.close()
+    d.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        d.map_shards(lambda i, lo, hi: hi - lo, d.shard_bounds(4))
