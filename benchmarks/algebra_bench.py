@@ -1,0 +1,195 @@
+"""Semantic algebra smoke bench: sem_join + sem_topk plan/execute/meet.
+
+Plans and executes the two tree-shaped operators end to end on the
+planted synthetic corpora through the public Session API:
+
+  join  — two-corpus ``sem_join`` blocked on the shared category column:
+          both side cascades plus the pairing cascade planned through
+          ONE grouped relaxation (the query-level error budget split
+          across the tree's pipelines), executed as three streaming
+          cascade runs over blocked survivor pairs
+  topk  — ``sem_topk`` rank cut: reject-only cascade with gold-score
+          recording and one deterministic global cut at finalize
+
+and records planning/execution wall clock, LLM-tuple counts, the
+blocked-pair corpus size against the full cross product, and
+recall/precision against the gold tree reference. With ``--gate`` it
+exits non-zero when a feasible plan misses its declared recall target
+(minus statistical headroom) — the guarantee-met existence proof, not
+just an it-parses check.
+
+Artifact flow: the result dict merges into the newest BENCH_*.json in
+--out under a separate "algebra" key (the kernels gate's per-row
+regression check only reads "rows", so these numbers never trip it), or
+a standalone BENCH file when no kernels artifact exists.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import Session, SessionConfig  # noqa: E402
+from repro.core import PlannerConfig  # noqa: E402
+from repro.data.synthetic import make_dataset, make_join_corpora  # noqa: E402
+
+SMOKE = dict(n_side=60, n_items=100, k=30,
+             planner=PlannerConfig(steps=150, restarts=2, snapshots=3))
+FULL = dict(n_side=120, n_items=240, k=60,
+            planner=PlannerConfig(steps=400, restarts=3, snapshots=4))
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "nogit"
+    except Exception:
+        return "nogit"
+
+
+def bench_join(sess: Session, n_side: int, target: float) -> Dict:
+    left, right = make_join_corpora(n_left=n_side, n_right=n_side, seed=5)
+    jf = (sess.frame(left.items)
+          .sem_filter("left side filter", task_id=1)
+          .sem_join(sess.frame(right.items), "same latent value",
+                    task_id=3, on="category")
+          .with_guarantees(recall=target, precision=target))
+    t0 = time.monotonic()
+    plan = jf.plan()
+    plan_wall = time.monotonic() - t0
+    t0 = time.monotonic()
+    res = jf.execute()
+    exec_wall = time.monotonic() - t0
+    m = res.metrics()
+    return {
+        "n_left": n_side, "n_right": n_side,
+        "target_recall": target,
+        "feasible": bool(plan.feasible),
+        "recall_bound": plan.recall_bound,
+        "precision_bound": plan.precision_bound,
+        "budget_split": {r: list(v) for r, v in plan.split.items()},
+        "est_pairs": plan.est_pairs,
+        "pairs_scored": len(res.pair_items),
+        "cross_product": n_side * n_side,
+        "n_result": m["n_result"], "n_gold": m["n_gold"],
+        "recall": m["recall"], "precision": m["precision"],
+        "n_llm_tuples": res.n_llm_tuples,
+        "plan_wall_s": plan_wall, "exec_wall_s": exec_wall,
+    }
+
+
+def bench_topk(sess: Session, n_items: int, k: int, target: float) -> Dict:
+    ds = make_dataset("alg-bench", n_items, seed=9)
+    fr = (sess.frame(ds.items)
+          .sem_topk("rank by topic 2", task_id=2, k=k)
+          .with_guarantees(recall=target, precision=target))
+    t0 = time.monotonic()
+    plan = fr.plan()
+    plan_wall = time.monotonic() - t0
+    t0 = time.monotonic()
+    res = fr.execute()
+    exec_wall = time.monotonic() - t0
+    m = res.metrics()
+    return {
+        "n_items": n_items, "k": k,
+        "target_recall": target,
+        "feasible": bool(plan.feasible),
+        "recall_bound": plan.recall_bound,
+        "n_accepted": int(res.accepted.sum()),
+        "recall": m["recall"], "precision": m["precision"],
+        "n_llm_tuples": res.n_llm_tuples,
+        "plan_wall_s": plan_wall, "exec_wall_s": exec_wall,
+    }
+
+
+def run_bench(smoke: bool, target: float) -> Dict:
+    p = SMOKE if smoke else FULL
+    with Session(SessionConfig(planner=p["planner"], sample_frac=0.3,
+                               sm_ratios=(0.5, 0.0), lg_ratios=(0.5,),
+                               include_cheap=True)) as sess:
+        join = bench_join(sess, p["n_side"], target)
+        topk = bench_topk(sess, p["n_items"], p["k"], target)
+    return {"name": "algebra_join_topk", "mode": "smoke" if smoke else
+            "full", "join": join, "topk": topk}
+
+
+def _emit_artifact(row: Dict, out_dir: str) -> str:
+    """Merge under "algebra" into the newest BENCH_*.json (the same
+    artifact CI uploads), else write a standalone file."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
+    if paths:
+        path = paths[-1]
+        with open(path) as f:
+            artifact = json.load(f)
+        artifact["algebra"] = row
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=1)
+        return path
+    ts = time.strftime("%Y%m%dT%H%M%SZ", time.gmtime())
+    path = os.path.join(out_dir, f"BENCH_{ts}-{_git_sha()}.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "stretto-algebra-bench-v1", "ts": ts,
+                   "sha": _git_sha(), "algebra": row}, f, indent=1)
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpora + fast annealer (CI mode)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail when a feasible plan misses its declared "
+                         "recall target minus --headroom")
+    ap.add_argument("--target", type=float, default=0.6,
+                    help="declared recall/precision target")
+    ap.add_argument("--headroom", type=float, default=0.1,
+                    help="--gate: statistical slack below the declared "
+                         "target before failing")
+    ap.add_argument("--out", default="results/bench",
+                    help="artifact directory (merges into the newest "
+                         "BENCH_*.json there)")
+    args = ap.parse_args(argv)
+
+    row = run_bench(args.smoke, args.target)
+    j, t = row["join"], row["topk"]
+    print(f"[algebra] join {j['n_left']}x{j['n_right']}: "
+          f"{j['pairs_scored']} of {j['cross_product']} pairs scored, "
+          f"recall {j['recall']:.3f} / precision {j['precision']:.3f} "
+          f"(target {j['target_recall']:.2f}, feasible={j['feasible']}), "
+          f"split over {len(j['budget_split'])} pipelines, "
+          f"plan {j['plan_wall_s']:.1f}s exec {j['exec_wall_s']:.1f}s")
+    print(f"[algebra] topk k={t['k']}/{t['n_items']}: "
+          f"{t['n_accepted']} accepted, recall {t['recall']:.3f} "
+          f"(target {t['target_recall']:.2f}, feasible={t['feasible']}), "
+          f"plan {t['plan_wall_s']:.1f}s exec {t['exec_wall_s']:.1f}s")
+
+    failed = False
+    floor = args.target - args.headroom
+    for label, r in (("join", j), ("topk", t)):
+        if args.gate and r["feasible"] and r["recall"] < floor:
+            print(f"[algebra] FAIL: {label} recall {r['recall']:.3f} < "
+                  f"{floor:.3f} (declared {args.target:.2f} - headroom)")
+            failed = True
+    if len(j["budget_split"]) < 2:
+        print("[algebra] FAIL: join budget split covers "
+              f"{len(j['budget_split'])} pipeline(s), expected >= 2")
+        failed = True
+
+    path = _emit_artifact(row, args.out)
+    print(f"[algebra] wrote {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,10 +24,11 @@ and supported — the api package adds no planning or execution logic of
 its own, so everything the parity tests pin (bit-identical decisions,
 equal plan stages) holds by construction.
 """
-from repro.api.explain import ExplainReport, ExplainStage
-from repro.api.frame import SemFrame
-from repro.api.result import QueryResult, ResultStream
+from repro.api.explain import ExplainReport, ExplainStage, TreeExplainReport
+from repro.api.frame import JoinFrame, SemFrame
+from repro.api.result import JoinResult, QueryResult, ResultStream
 from repro.api.session import EngineSpec, Session, SessionConfig
 
-__all__ = ["EngineSpec", "ExplainReport", "ExplainStage", "QueryResult",
-           "ResultStream", "SemFrame", "Session", "SessionConfig"]
+__all__ = ["EngineSpec", "ExplainReport", "ExplainStage", "JoinFrame",
+           "JoinResult", "QueryResult", "ResultStream", "SemFrame",
+           "Session", "SessionConfig", "TreeExplainReport"]

@@ -19,8 +19,9 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.logical import Query, RelFilter, SemFilter, SemMap
-from repro.core.physical import PhysicalPlan
+from repro.core.logical import (Query, RelFilter, SemAgg, SemFilter,
+                                SemJoin, SemMap, SemTopK)
+from repro.core.physical import TREE_ROLES, PhysicalPlan, TreePlan
 
 
 @dataclass(frozen=True)
@@ -65,6 +66,16 @@ class ExplainStage:
 
 
 def _describe_node(node) -> str:
+    # subclass checks first: SemTopK is a SemFilter, SemAgg a SemMap
+    if isinstance(node, SemTopK):
+        return f"SemTopK k={node.k} {node.text!r} (task {node.task_id})"
+    if isinstance(node, SemAgg):
+        grp = f" group_by={node.group_by!r}" if node.group_by else ""
+        return (f"SemAgg {node.how}{grp} {node.text!r} "
+                f"(task {node.task_id} -> {node.out_column!r})")
+    if isinstance(node, SemJoin):
+        on = f", on={node.on!r}" if node.on else ""
+        return f"SemJoin {node.text!r} (task {node.task_id}{on})"
     if isinstance(node, SemFilter):
         return f"SemFilter {node.text!r} (task {node.task_id})"
     if isinstance(node, SemMap):
@@ -93,6 +104,10 @@ class ExplainReport:
     dispatcher: str                     # session execution defaults
     partition_size: Optional[int]
     coalesce: Optional[int]
+    # RelFilters the checked pushdown could NOT move ahead of the LLM
+    # stages (they reference a SemMap's output column, or sit behind a
+    # SemTopK/SemAgg barrier) — executed as post-filters
+    post_relational: Tuple[str, ...] = ()
     # measured execution summary — None until with_measured() (ANALYZE)
     measured_runtime_s: Optional[float] = None    # summed operator time
     measured_wall_s: Optional[float] = None       # elapsed wall clock
@@ -151,7 +166,12 @@ class ExplainReport:
             dispatcher=effective_spec(cfg.dispatcher),
             partition_size=cfg.partition_size,
             coalesce=cfg.coalesce if cfg.coalesce is not None
-            else DEFAULT_COALESCE)
+            else DEFAULT_COALESCE,
+            post_relational=tuple(
+                f"{_describe_node(r)} "
+                + (f"[over map L{li}'s extracted value]" if li is not None
+                   else "[post-barrier row filter]")
+                for r, li in getattr(plan, "post_relational", ())))
 
     def with_measured(self, result) -> "ExplainReport":
         """EXPLAIN ANALYZE: a new report with the measured per-stage
@@ -235,8 +255,11 @@ class ExplainReport:
         out = [head, "logical plan (declared order):"]
         out += [f"  {i}: {d}" for i, d in enumerate(self.logical)]
         if self.relational:
-            out.append("relational prefilters (pulled up, run first):")
+            out.append("relational prefilters (pushed down, run first):")
             out += [f"  {d}" for d in self.relational]
+        if self.post_relational:
+            out.append("post-filters (pinned — pushdown illegal):")
+            out += [f"  {d}" for d in self.post_relational]
         verdict = "feasible" if self.feasible else "INFEASIBLE on sample"
         out.append(
             f"physical cascade ({verdict}, est_cost={self.est_cost_s:.2f}s,"
@@ -340,6 +363,120 @@ class ExplainReport:
                     f"{self.measured_shared_batches} shared_width="
                     f"{self.measured_shared_width} (flushes merged with "
                     f"concurrent queries)")
+        return "\n".join(out)
+
+    def __str__(self) -> str:
+        return self.render()
+
+
+@dataclass(frozen=True)
+class TreeExplainReport:
+    """Tree-shaped EXPLAIN for a planned semantic join.
+
+    One section per role pipeline (left side, right side, pair cascade)
+    rendered under a tree spine, around the *joint* header: the
+    query-level bounds the grouped relaxation certifies and the budget
+    split — each role's achieved sample-level (recall, precision) under
+    the jointly chosen thresholds, i.e. where the query's error budget
+    actually went. `JoinResult.explain_analyze()` re-renders it with
+    each role's measured execution telemetry (`with_measured`)."""
+    n_left: int
+    n_right: int
+    est_pairs: int
+    join_desc: str
+    target_recall: float
+    target_precision: float
+    recall_bound: float                 # joint Bayesian lower bounds
+    precision_bound: float
+    feasible: bool
+    est_cost_s: float
+    planning_time_s: float
+    # (role, sample_recall, sample_precision) — the budget allocation
+    split: Tuple[Tuple[str, float, float], ...]
+    sections: Tuple[Tuple[str, ExplainReport], ...]
+    measured_runtime_s: Optional[float] = None
+    measured_wall_s: Optional[float] = None
+    measured_pairs: Optional[int] = None      # pairs actually scored
+    measured_accepted: Optional[int] = None   # pairs in the result
+
+    @property
+    def analyzed(self) -> bool:
+        return self.measured_runtime_s is not None
+
+    @classmethod
+    def from_plan(cls, session, plan: TreePlan, n_left: int,
+                  n_right: int) -> "TreeExplainReport":
+        n_role = {"left": n_left, "right": n_right, "pair": plan.est_pairs}
+        sections = tuple(
+            (role, ExplainReport.from_plan(session, plan.queries[role],
+                                           range(n_role[role]),
+                                           plan.roles[role]))
+            for role in TREE_ROLES)
+        q = plan.queries["pair"]
+        return cls(
+            n_left=n_left, n_right=n_right, est_pairs=plan.est_pairs,
+            join_desc=_describe_node(plan.join),
+            target_recall=q.target_recall,
+            target_precision=q.target_precision,
+            recall_bound=plan.recall_bound,
+            precision_bound=plan.precision_bound,
+            feasible=plan.feasible, est_cost_s=plan.est_cost,
+            planning_time_s=plan.planning_time_s,
+            split=tuple((r, *plan.split[r]) for r in TREE_ROLES
+                        if r in plan.split),
+            sections=sections)
+
+    def with_measured(self, result) -> "TreeExplainReport":
+        """EXPLAIN ANALYZE for a tree: each role section gets its own
+        run's measured telemetry (`result` is a runtime TreeResult)."""
+        sections = tuple((role, rep.with_measured(result.roles[role]))
+                         for role, rep in self.sections)
+        return replace(self, sections=sections,
+                       measured_runtime_s=result.runtime_s,
+                       measured_wall_s=result.wall_s,
+                       measured_pairs=len(result.pair_items),
+                       measured_accepted=len(result.pair_ids))
+
+    def rows(self) -> List[Dict[str, Any]]:
+        """Every role's stage table as dicts, with a `role` column."""
+        return [dict(r, role=role)
+                for role, rep in self.sections for r in rep.rows()]
+
+    def render(self) -> str:
+        verb = "EXPLAIN ANALYZE" if self.analyzed else "EXPLAIN"
+        verdict = "feasible" if self.feasible else "INFEASIBLE on sample"
+        out = [
+            f"{verb} — semantic join tree over {self.n_left} x "
+            f"{self.n_right} items, guarantees R>={self.target_recall} "
+            f"P>={self.target_precision}",
+            self.join_desc,
+            f"joint bounds R>={self.recall_bound:.3f} "
+            f"P>={self.precision_bound:.3f} ({verdict}), "
+            f"est_cost={self.est_cost_s:.2f}s, "
+            f"est_pairs~{self.est_pairs}, "
+            f"planned in {self.planning_time_s:.2f}s",
+            "budget split across pipelines (sample R/P at the jointly "
+            "chosen thresholds):",
+        ]
+        out += [f"  {role:>5}: R={rec:.3f} P={prec:.3f}"
+                for role, rec, prec in self.split]
+        for i, (role, rep) in enumerate(self.sections):
+            last = i == len(self.sections) - 1
+            head, bar = ("└─ ", "   ") if last else ("├─ ", "│  ")
+            if role == "pair":
+                out.append(f"{head}pair (~{self.est_pairs} blocked "
+                           f"survivor pairs)")
+            else:
+                n = self.n_left if role == "left" else self.n_right
+                out.append(f"{head}{role} ({n} items)")
+            out += [bar + line for line in rep.render().splitlines()]
+        if self.analyzed:
+            out.append(
+                f"measured: runtime_s={self.measured_runtime_s:.2f} "
+                f"(operator-time sum) wall_s={self.measured_wall_s:.2f} "
+                f"(elapsed, 3 runs + pairing) "
+                f"pairs_scored={self.measured_pairs} "
+                f"accepted={self.measured_accepted}")
         return "\n".join(out)
 
     def __str__(self) -> str:

@@ -119,6 +119,41 @@ class QueryResult:
         ref = vs.raw if isinstance(vs, QueryResult) else vs
         return evaluate_vs_gold(self.raw, ref, self.query.semantic_ops)
 
+    def aggregate(self) -> Dict[Any, Any]:
+        """Group-wise aggregates of the query's SemAgg operator: a dict
+        keyed by `group_by` column value (a single None key when
+        ungrouped) over the accepted survivors. ``how="mode"`` returns
+        the most common committed extraction per group (ties break
+        toward the smallest value token, deterministically);
+        ``how="count"`` the surviving member count per group."""
+        from repro.core.logical import SemAgg
+        aggs = [(li, op) for li, op in enumerate(self.query.semantic_ops)
+                if isinstance(op, SemAgg)]
+        if not aggs:
+            raise ValueError("aggregate() needs a SemAgg in the query "
+                             "(add .sem_agg before the terminal verb)")
+        li, op = aggs[-1]
+        vals = self.map_values.get(li)
+        groups: Dict[Any, List[int]] = {}
+        for i, (it, ok) in enumerate(zip(self.items, self.accepted)):
+            if not ok:
+                continue
+            key = None if op.group_by is None else \
+                (getattr(it, "row", {}) or {}).get(op.group_by)
+            groups.setdefault(key, []).append(i)
+        out: Dict[Any, Any] = {}
+        for gkey, idxs in groups.items():
+            if op.how == "count":
+                out[gkey] = len(idxs)
+            else:
+                counts: Dict[int, int] = {}
+                for i in idxs:
+                    v = int(vals[i])
+                    counts[v] = counts.get(v, 0) + 1
+                out[gkey] = max(counts.items(),
+                                key=lambda kv: (kv[1], -kv[0]))[0]
+        return out
+
     def explain_analyze(self):
         """EXPLAIN ANALYZE: the planned ExplainReport for this (query,
         corpus) with this execution's measured telemetry filled in —
@@ -158,6 +193,97 @@ class QueryResult:
                 f"{self.accepted.size} accepted, "
                 f"runtime={self.runtime_s:.2f}s, "
                 f"partitions={self.n_partitions})")
+
+
+class JoinResult:
+    """Result of executing a two-corpus semantic join (a JoinFrame).
+
+    Wraps the runtime TreeResult: one RuntimeResult per role (left /
+    right side cascades, pair cascade over the blocked survivor pairs)
+    plus the accepted ``(left_id, right_id)`` pairs. `.metrics()`
+    compares the pair-id set against the gold join — both sides' gold
+    plans and the gold pair scorer — memoized by the Session so it runs
+    at most once per (corpora, tree)."""
+
+    def __init__(self, session, left_items: Sequence[Any],
+                 right_items: Sequence[Any], raw):
+        self.session = session
+        self.left_items = left_items
+        self.right_items = right_items
+        self.raw = raw                       # runtime.tree.TreeResult
+        self._metrics_cache: Optional[Dict[str, float]] = None
+
+    # ---------------- raw execution fields ----------------
+
+    @property
+    def pair_ids(self) -> List[Any]:
+        """Accepted (left_id, right_id) tuples, deterministic order."""
+        return self.raw.pair_ids
+
+    @property
+    def pair_items(self) -> List[Any]:
+        """The blocked survivor pair corpus the pair cascade scored."""
+        return self.raw.pair_items
+
+    @property
+    def stage_stats(self) -> List[StageStats]:
+        """Merged tree telemetry: every role's stages under tree-unique
+        logical indices (tiles exactly like single-pipeline stats)."""
+        return self.raw.stage_stats
+
+    @property
+    def runtime_s(self) -> float:
+        return self.raw.runtime_s
+
+    @property
+    def wall_s(self) -> float:
+        return self.raw.wall_s
+
+    @property
+    def n_llm_tuples(self) -> int:
+        return self.raw.n_llm_tuples
+
+    def role(self, name: str) -> RuntimeResult:
+        """One role's raw RuntimeResult ('left' | 'right' | 'pair')."""
+        return self.raw.roles[name]
+
+    # ---------------- conveniences ----------------
+
+    def matches(self) -> List[Any]:
+        """The accepted PairItems, in deterministic left-major order."""
+        acc = self.raw.roles["pair"].accepted
+        return [p for p, ok in zip(self.raw.pair_items, acc) if ok]
+
+    def gold(self):
+        """The gold tree execution for the same (corpora, tree) —
+        memoized by the session."""
+        return self.session.gold_tree(self.raw.plan, self.left_items,
+                                      self.right_items)
+
+    def metrics(self) -> Dict[str, float]:
+        """Pair-id-set recall / precision / F1 against the gold join
+        (computed lazily, gold runs at most once)."""
+        if self._metrics_cache is None:
+            from repro.runtime.tree import evaluate_pairs
+            self._metrics_cache = evaluate_pairs(self.raw, self.gold())
+        return self._metrics_cache
+
+    def explain_analyze(self):
+        """Tree-shaped EXPLAIN ANALYZE: the planned TreeExplainReport
+        with each role's measured execution telemetry filled in."""
+        from repro.api.explain import TreeExplainReport
+        report = TreeExplainReport.from_plan(
+            self.session, self.raw.plan, len(self.left_items),
+            len(self.right_items))
+        return report.with_measured(self.raw)
+
+    def __len__(self) -> int:
+        return len(self.raw.pair_ids)
+
+    def __repr__(self) -> str:
+        return (f"JoinResult({len(self.raw.pair_ids)} pairs of "
+                f"{len(self.raw.pair_items)} scored, "
+                f"runtime={self.runtime_s:.2f}s)")
 
 
 class ResultStream(Iterator[PartitionResult]):

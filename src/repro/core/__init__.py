@@ -3,12 +3,15 @@ from repro.core.bounds import (beta_lower_bound, betaincinv,
                                precision_lower_bound, recall_lower_bound)
 from repro.core.executor import (ExecutionResult, evaluate_vs_gold,
                                  execute_plan)
-from repro.core.logical import (Query, RelFilter, SemFilter, SemMap,
-                                pull_up_semantic)
+from repro.core.logical import (AggNode, JoinNode, LogicalNode, PipelineLeaf,
+                                Query, RelFilter, SemAgg, SemFilter, SemJoin,
+                                SemMap, SemTopK, TopKNode, as_tree,
+                                lower_tree, normalize, pull_up_semantic)
 from repro.core.optimizer import OptimizedPlan, PlannerConfig, optimize_query
 from repro.core.physical import (CostCurve, PhysicalOperator, PhysicalPlan,
-                                 PhysicalPlanStage, ProfiledPipeline)
-from repro.core.planner import plan_query
+                                 PhysicalPlanStage, ProfiledPipeline,
+                                 TreePlan)
+from repro.core.planner import plan_query, plan_tree
 from repro.core.profiling import (MeasuredBatchStore, batch_drift,
                                   fit_cost_curve, profile_query)
 from repro.core.relaxation import (BatchHint, PipelineData, PipelineParams,

@@ -94,11 +94,20 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
                    gold_membership: np.ndarray,
                    target_recall: float, target_precision: float,
                    cfg: Optional[PlannerConfig] = None,
-                   batch_hint: Optional[R.BatchHint] = None
+                   batch_hint: Optional[R.BatchHint] = None,
+                   groups: Optional[Sequence[R.TreeGroup]] = None
                    ) -> OptimizedPlan:
     """batch_hint activates the batch-size-aware cost model for pipelines
     carrying fixed per-call costs (see relaxation.BatchHint); pipelines
-    without `fixed` data are costed exactly as before."""
+    without `fixed` data are costed exactly as before.
+
+    groups switches the simulation from the linear `query_counts` chain
+    to the grouped `tree_counts` (join trees: side pipelines reset their
+    reach, the pairing cascade's entry mass is the product of the side
+    survivals, and per-group cost weights/hints price each pipeline
+    against its own corpus) — the query-level error budget is then
+    allocated across every pipeline of the tree by the same joint
+    gradient relaxation. Omitted (the default), behavior is unchanged."""
     # default constructed per call — a shared default instance would leak
     # mutations between unrelated optimizations
     cfg = cfg if cfg is not None else PlannerConfig()
@@ -112,10 +121,16 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
         for p in pipelines) * g.shape[0]
     max_cost = max(max_cost, 1e-9)
 
+    def counts_fn(params_list, tau, hard=False, pick_tau=None):
+        if groups is not None:
+            return R.tree_counts(pipelines, params_list, g, groups, tau,
+                                 hard=hard, pick_tau=pick_tau)
+        return R.query_counts(pipelines, params_list, g, tau, hard=hard,
+                              pick_tau=pick_tau, batch_hint=batch_hint)
+
     def loss_fn(flat, tau):
         params_list = unflatten_params(flat, sizes)
-        c = R.query_counts(pipelines, params_list, g, tau,
-                           pick_tau=cfg.pick_tau, batch_hint=batch_hint)
+        c = counts_fn(params_list, tau, pick_tau=cfg.pick_tau)
         l_rec = B.recall_lower_bound(c.tp, c.fn, cfg.credibility)
         l_prec = B.precision_lower_bound(c.tp, c.fp, cfg.credibility)
         l_cost = c.cost / max_cost                                 # Eq. 12
@@ -160,8 +175,7 @@ def optimize_query(pipelines: Sequence[R.PipelineData],
     flats, losses, trajs = jax.jit(jax.vmap(run_one))(flat0)
 
     def hard_eval(plist):
-        c = R.query_counts(pipelines, plist, g, 0.0, hard=True,
-                           batch_hint=batch_hint)
+        c = counts_fn(plist, 0.0, hard=True)
         l_rec = B.recall_lower_bound(c.tp, c.fn, cfg.credibility)
         l_prec = B.precision_lower_bound(c.tp, c.fp, cfg.credibility)
         return c, float(l_rec), float(l_prec)

@@ -116,6 +116,13 @@ class PhysicalPlan:
     precision_bound: float
     feasible: bool
     planning_time_s: float = 0.0
+    # post-filters a checked pushdown could NOT move ahead of the LLM
+    # stages: [(RelFilter, producing_map_logical_idx | None)]. An entry
+    # with a map index filters that SemMap's extracted value; None means
+    # a structured-row predicate pinned behind a SemTopK/SemAgg barrier.
+    # Applied by the executor at result assembly, after the cascades.
+    post_relational: List[Tuple[Any, Optional[int]]] = field(
+        default_factory=list)
 
     def describe(self) -> str:
         lines = [f"PhysicalPlan(est_cost={self.est_cost:.2f}s, "
@@ -130,4 +137,65 @@ class PhysicalPlan:
                 f"  L{s.logical_idx}/s{s.stage} {s.op_name}{tag} "
                 f"thr=({s.thr_lo:+.2f},{s.thr_hi:+.2f}) "
                 f"cost={s.cost * 1e3:.2f}ms/t{batch}")
+        for r, li in self.post_relational:
+            where = f"map L{li} value" if li is not None else "row"
+            lines.append(f"  post-rel ({where}): {r}")
         return "\n".join(lines)
+
+
+# role order of a join tree's pipelines: the planner concatenates
+# profiles/params group-major in exactly this order
+TREE_ROLES = ("left", "right", "pair")
+
+
+@dataclass
+class TreePlan:
+    """A planned logical tree: one PhysicalPlan per role pipeline
+    (`left` / `right` sides, then the `pair` cascade over blocked
+    survivor pairs), plus the jointly optimized query-level bounds.
+
+    The roles were optimized *together* through one grouped relaxation
+    (`relaxation.tree_counts`), so the query-level recall/precision
+    budget is split across them; `split` records each role's achieved
+    sample-level (recall, precision) under the chosen thresholds — the
+    visible budget allocation EXPLAIN renders."""
+    roles: Dict[str, PhysicalPlan]       # keyed by TREE_ROLES
+    queries: Dict[str, Any]              # role -> Query driving that plan
+    join: Any                            # the SemJoin node
+    est_cost: float                      # corpus-level expected seconds
+    recall_bound: float                  # joint Bayesian lower bounds
+    precision_bound: float
+    feasible: bool
+    split: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+    est_pairs: int = 0                   # expected blocked pair-corpus size
+    planning_time_s: float = 0.0
+
+    def role_base(self, role: str) -> int:
+        """Logical-index offset of a role's pipelines in the flattened
+        tree view (left ops first, then right, then pair) — the retag
+        that keeps (logical_idx, stage, op_name) unique across roles in
+        merged telemetry."""
+        base = 0
+        for r in TREE_ROLES:
+            if r == role:
+                return base
+            base += len(self.queries[r].semantic_ops)
+        raise ValueError(role)
+
+    @property
+    def stages(self) -> List[PhysicalPlanStage]:
+        """Every role's stages with tree-unique logical indices
+        (scheduler/EXPLAIN view; execution uses the role-local plans)."""
+        import dataclasses as _dc
+        out: List[PhysicalPlanStage] = []
+        for role in TREE_ROLES:
+            base = self.role_base(role)
+            for s in self.roles[role].stages:
+                out.append(_dc.replace(
+                    s, logical_idx=s.logical_idx + base))
+        return out
+
+    @property
+    def relational(self) -> List[Any]:
+        return [r for role in TREE_ROLES
+                for r in self.roles[role].relational]

@@ -53,6 +53,10 @@ class PipelineData(NamedTuple):
     #                                         op from past executions
     #                                         (nan: unmeasured — fall back
     #                                         to BatchHint.width)
+    no_accept: bool = False  # SemTopK pipelines: non-gold stages may only
+    #                          reject (their accept mass stays unsure) —
+    #                          the accept boundary is the global rank cut,
+    #                          which only the gold scorer can place
 
 
 class BatchHint(NamedTuple):
@@ -140,6 +144,13 @@ def simulate_pipeline(params: PipelineParams, data: PipelineData, tau,
         sigma = jax.nn.sigmoid(params.pick_logits / jnp.maximum(pt, 1e-6))
         acc_i, rej_i, uns_i = soft_decisions(
             data.scores, params.thr_hi, params.thr_lo, tau, data.is_map)
+    if data.no_accept:
+        # reject-only cascade (SemTopK): a non-gold accept is illegal —
+        # only the gold rank cut admits — so its mass stays unsure. The
+        # gold override below still applies (its scores are pre-shifted
+        # by the sample rank threshold, so >0 means "in the top k").
+        uns_i = uns_i + acc_i
+        acc_i = jnp.zeros_like(acc_i)
     # gold (last) op: always selected, never unsure, decides at its natural
     # boundary (log-odds 0) — it defines the reference, so no learned
     # thresholds apply to it. Maps always commit.
@@ -223,6 +234,81 @@ def query_counts(pipelines, params_list, gold_membership, tau,
             p_in = p_in * accept
             p_good = p_good * accept
             survive = survive * accept
+    g = gold_membership.astype(jnp.float32)
+    tp = jnp.sum(p_good * g)
+    fp = jnp.sum(jnp.maximum(p_in - p_good * g, 0.0))
+    fn = jnp.sum(jnp.maximum(g - p_good * g, 0.0))
+    return QueryCounts(tp, fp, fn, jnp.sum(total_cost))
+
+
+class TreeGroup(NamedTuple):
+    """One pipeline group of a tree-shaped query in the relaxation.
+
+    The join relaxation runs over *pair coordinates*: every sample tuple
+    t = (i, j) pairs a left-sample item with a right-sample item, and
+    each side's per-op scores are broadcast onto those coordinates
+    (score[op, t] = score[op, i]). Groups structure the survive chain:
+
+      kind "side" — an independent input pipeline (a join side). Its
+        reach resets to 1 (the side scans its own corpus regardless of
+        the other side's outcomes) and its survival multiplies the
+        downstream entry mass.
+      kind "pair" — a downstream pairing cascade: a pair is only scored
+        when BOTH sides survived, so its entry reach is the product of
+        the completed side survivals.
+
+    cost_weight converts summed pair-coordinate reach mass into corpus
+    tuples for this group (a left op's reach is constant across the j
+    axis, so its pair-coordinate sum overcounts by n_right_sample; the
+    weight divides that back out and folds in the sample->corpus scale),
+    making QueryCounts.cost the corpus-level expected cost directly.
+    hint is the group's own BatchHint (each group flushes against its
+    own corpus, so each amortizes fixed costs over its own widths)."""
+    count: int               # number of pipelines in this group
+    kind: str                # "side" | "pair"
+    cost_weight: float       # pair-coordinate reach -> corpus tuples
+    hint: BatchHint          # group-local batch context
+
+
+def tree_counts(pipelines, params_list, gold_membership, groups, tau,
+                hard: bool = False, pick_tau=None) -> QueryCounts:
+    """`query_counts` generalized to a grouped plan tree (paper's
+    query-level budget allocation across pipelines, extended past the
+    linear chain).
+
+    pipelines/params_list are concatenated group-major ([left ops...,
+    right ops..., pair ops...]); `groups` names the boundaries. TP/FP/FN
+    keep the exact per-tuple product form of `query_counts` — a pair is
+    in the result iff its left side passes, its right side passes, and
+    the pairing cascade accepts, which is precisely the product of
+    accepts over all three groups on the shared pair coordinates — so
+    the recall/precision budget splits across the tree's pipelines
+    through one joint optimization rather than per-pipeline heuristics.
+    """
+    N = gold_membership.shape[0]
+    p_in = jnp.ones(N)
+    p_good = jnp.ones(N)
+    total_cost = jnp.zeros(N)
+    entry_acc = jnp.ones(N)  # product of completed side-group survivals
+    idx = 0
+    for grp in groups:
+        survive = jnp.ones(N) if grp.kind == "side" else entry_acc
+        for _ in range(grp.count):
+            data, params = pipelines[idx], params_list[idx]
+            idx += 1
+            accept, cost, decided = simulate_pipeline(
+                params, data, tau, hard, pick_tau, grp.hint,
+                reach_weight=survive)
+            total_cost = total_cost + grp.cost_weight * survive * cost
+            if data.is_map:
+                p_corr = pipeline_value_correct(decided, data.correct)
+                p_good = p_good * p_corr
+            else:
+                p_in = p_in * accept
+                p_good = p_good * accept
+                survive = survive * accept
+        if grp.kind == "side":
+            entry_acc = entry_acc * survive
     g = gold_membership.astype(jnp.float32)
     tp = jnp.sum(p_good * g)
     fp = jnp.sum(jnp.maximum(p_in - p_good * g, 0.0))

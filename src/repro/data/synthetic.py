@@ -108,6 +108,24 @@ def make_dataset(name: str, n_items: int, n_filter_tasks: int = 10,
     return Dataset(name, items, n_filter_tasks, n_map_tasks, modality)
 
 
+def make_join_corpora(n_left: int = 120, n_right: int = 120, seed: int = 0,
+                      id_offset: int = 1_000_000
+                      ) -> Tuple[Dataset, Dataset]:
+    """Two independently planted corpora for `sem_join` experiments.
+
+    Both carry the full task layout (a join on map task k matches pairs
+    whose latent `map_vals[k]` agree — ~1/8 of pairs) and the shared
+    structured `category` column for equi-join blocking. Right-corpus
+    item ids are offset into a disjoint id space: serving profiles are
+    keyed by item id, so the two corpora can share one engine/cache
+    store without collisions."""
+    left = make_dataset("join-left", n_left, seed=seed)
+    right = make_dataset("join-right", n_right, seed=seed + 101)
+    for it in right.items:
+        it.item_id += id_offset
+    return left, right
+
+
 def paper_datasets(scale: float = 1.0) -> Dict[str, Dataset]:
     """The five evaluation corpora (sizes from the paper)."""
     spec = [("artwork", 1000, "image", 11), ("rotowire", 728, "text", 13),

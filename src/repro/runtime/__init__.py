@@ -46,6 +46,13 @@ _EXPORTS = {
     "resolve_dispatcher": "repro.runtime.dispatch",
     "effective_spec": "repro.runtime.dispatch",
     "DISPATCHER_ENV": "repro.runtime.dispatch",
+    "PairItem": "repro.runtime.tree",
+    "TreeResult": "repro.runtime.tree",
+    "make_pairs": "repro.runtime.tree",
+    "survivor_pairs": "repro.runtime.tree",
+    "run_tree": "repro.runtime.tree",
+    "run_gold_tree": "repro.runtime.tree",
+    "evaluate_pairs": "repro.runtime.tree",
     "gold_membership": "repro.runtime.plan_utils",
     "gold_plan_for": "repro.runtime.plan_utils",
     "pipelines_data": "repro.runtime.plan_utils",

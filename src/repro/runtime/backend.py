@@ -190,10 +190,14 @@ class ReferenceBackend(RegistryBackend):
     name = "reference"
 
     def __init__(self, engine, *, lg: str = "lg"):
-        from repro.serving.operators import KVCacheLLMOperator
+        from repro.core.logical import SemJoin
+        from repro.serving.operators import (KVCacheLLMOperator,
+                                             KVCachePairOperator)
         self.engine = engine
 
         def gold_registry(op):
+            if isinstance(op, SemJoin):
+                return [KVCachePairOperator(engine, lg, 0.0, is_gold=True)]
             return [KVCacheLLMOperator(engine, lg, 0.0, is_gold=True)]
 
         super().__init__(gold_registry)

@@ -54,7 +54,7 @@ from typing import (Any, Deque, Dict, Generator, List, Optional, Sequence,
 
 import numpy as np
 
-from repro.core.logical import Query, SemFilter, SemMap
+from repro.core.logical import Query, SemFilter, SemMap, SemTopK
 from repro.core.physical import PhysicalPlan, PhysicalPlanStage
 from repro.runtime.backend import Backend, as_backend
 from repro.runtime.dispatch import (DEFAULT_COALESCE, FlushTask,
@@ -188,6 +188,13 @@ class RuntimeResult:
     #                                       used (None: whole corpus)
     coalesce: Optional[int] = None        # effective flush threshold
     #                                       actually used
+    # SemTopK deferred-cut export (sharded execution only): when a shard
+    # runs with the rank cut deferred, it reports per-pipeline raw gold
+    # ranking scores (NaN = never gold-scored) and the candidacy mask;
+    # the shard merger concatenates them and applies ONE global cut, so
+    # no shard ever cuts locally. None on every normally-cut result.
+    topk_scores: Optional[Dict[int, np.ndarray]] = None
+    topk_cand: Optional[Dict[int, np.ndarray]] = None
 
     @property
     def stage_times(self) -> List[Tuple[str, float, int]]:
@@ -273,11 +280,13 @@ def run_operator(backend: Backend, op, op_name: str,
     xfer = getattr(backend, "transfer_stats", None)
     x0 = xfer() if xfer is not None else (0.0, 0)
     t0 = time.perf_counter()
-    if isinstance(op, SemFilter):
+    if isinstance(op, SemMap):
+        values, scores = backend.run_map(op, op_name, items)
+    else:
+        # filter-like: SemFilter, SemTopK (scored like a filter, accepted
+        # by rank cut) and SemJoin (pair-scoring) all return log-odds
         scores = backend.score_filter(op, op_name, items)
         values = None
-    else:
-        values, scores = backend.run_map(op, op_name, items)
     wall = time.perf_counter() - t0
     x1 = xfer() if xfer is not None else (0.0, 0)
     return _OperatorOutcome(
@@ -292,7 +301,9 @@ class _CascadeState:
     O(N) bits, never item payloads, so it stays tiny even when the items
     themselves would not fit in memory)."""
 
-    def __init__(self, n_items: int, sem_ops: Sequence[Any]):
+    def __init__(self, n_items: int, sem_ops: Sequence[Any],
+                 post_rels: Sequence[Tuple[Any, Optional[int]]] = (),
+                 items: Optional[Sequence[Any]] = None):
         self.n_logical = len(sem_ops)
         self.sem_ops = sem_ops
         self.alive = np.ones(n_items, bool)
@@ -304,6 +315,17 @@ class _CascadeState:
                        for li in range(self.n_logical)}
         self.map_values: Dict[int, np.ndarray] = {}
         self.n_items = n_items
+        # pinned post-filters the checked pushdown could not move (see
+        # PhysicalPlan.post_relational): value predicates (producer map
+        # index) gate candidacy, row predicates (None) filter the result
+        self.post_rels = list(post_rels)
+        self.items = items
+        # SemTopK: the gold stage *records* scores instead of deciding;
+        # admission is the global rank cut applied at finalize (NaN =
+        # never gold-scored, e.g. early-terminated by a reject stage)
+        self.topk_scores: Dict[int, np.ndarray] = {
+            li: np.full(n_items, np.nan)
+            for li, op in enumerate(sem_ops) if isinstance(op, SemTopK)}
 
     def admit(self, idx: np.ndarray, alive: np.ndarray):
         """Register a partition: relational survivors become unsure
@@ -325,6 +347,12 @@ class _CascadeState:
     def apply(self, st: PhysicalPlanStage, idx: np.ndarray,
               out: _OperatorOutcome):
         li = st.logical_idx
+        if st.is_gold and li in self.topk_scores:
+            # top-k gold: record ranking scores, settle the tuples; the
+            # accept decision is the global rank cut at finalize_topk
+            self.topk_scores[li][idx] = out.scores
+            self.unsure[li][idx] = False
+            return
         if st.is_gold:
             acc, rej = gold_decide(out.scores, st.is_map)
         else:
@@ -342,11 +370,70 @@ class _CascadeState:
             self.unsure[li][idx[acc]] = False
             self.unsure[li][idx[rej]] = False
 
-    def result_mask(self) -> np.ndarray:
+    def _value_rel_mask(self, lo: int, hi: int) -> np.ndarray:
+        """Pinned predicates over extracted map values, evaluated on the
+        committed values of slice [lo, hi). Uncommitted tuples hold 0,
+        which never matches — they are rejected elsewhere anyway."""
+        m = np.ones(hi - lo, bool)
+        for rel, mli in self.post_rels:
+            if mli is None:
+                continue
+            vals = self.map_values.get(mli)
+            for t in range(hi - lo):
+                v = vals[lo + t] if vals is not None else 0
+                if not rel.apply({rel.column: v}):
+                    m[t] = False
+        return m
+
+    def _row_rel_mask(self, lo: int, hi: int) -> np.ndarray:
+        """Pinned structured-row predicates (behind a SemTopK/SemAgg
+        barrier): filter the *result* — after the rank cut, never before
+        (filtering candidacy would be a different query)."""
+        m = np.ones(hi - lo, bool)
+        rels = [rel for rel, mli in self.post_rels if mli is None]
+        if not rels or self.items is None:
+            return m
+        for t in range(hi - lo):
+            row = getattr(self.items[lo + t], "row", {}) or {}
+            if not all(rel.apply(row) for rel in rels):
+                m[t] = False
+        return m
+
+    def topk_candidates(self, li: int) -> np.ndarray:
+        """Rank-cut candidacy for SemTopK pipeline `li`: gold-scored
+        (not early-terminated), admitted by every other non-top-k filter,
+        and passing any pinned value predicates. Schedule-invariant:
+        whether a tuple got gold-scored before or after another filter
+        rejected it cannot change membership, because the other filter's
+        accept is required anyway."""
+        cand = self.alive & ~np.isnan(self.topk_scores[li])
+        for lj, op in enumerate(self.sem_ops):
+            if lj == li or isinstance(op, (SemMap, SemTopK)):
+                continue
+            cand &= self.accepted[lj]
+        cand &= self._value_rel_mask(0, self.n_items)
+        return cand
+
+    def finalize_topk(self):
+        """Apply each SemTopK's global rank cut: the k best gold scores
+        among candidates, ties broken by lower corpus index (lexsort) —
+        fully deterministic, so every dispatcher cuts identically."""
+        for li, scores in self.topk_scores.items():
+            cand = self.topk_candidates(li)
+            order = np.lexsort((np.arange(self.n_items), -scores))
+            chosen = order[cand[order]][:self.sem_ops[li].k]
+            self.accepted[li][chosen] = True
+
+    def result_mask(self, ignore_topk: bool = False) -> np.ndarray:
         result = self.alive.copy()
         for li, op in enumerate(self.sem_ops):
-            if isinstance(op, SemFilter):
-                result &= self.accepted[li]
+            if isinstance(op, SemMap):
+                continue            # maps never reject
+            if ignore_topk and isinstance(op, SemTopK):
+                continue            # deferred cut (sharded merge owns it)
+            result &= self.accepted[li]
+        result &= self._value_rel_mask(0, self.n_items)
+        result &= self._row_rel_mask(0, self.n_items)
         return result
 
     def partition_result(self, index: int, lo: int, hi: int
@@ -354,8 +441,10 @@ class _CascadeState:
         """Snapshot the (final) decisions for corpus slice [lo, hi)."""
         accepted = self.alive[lo:hi].copy()
         for li, op in enumerate(self.sem_ops):
-            if isinstance(op, SemFilter):
+            if not isinstance(op, SemMap):
                 accepted &= self.accepted[li][lo:hi]
+        accepted &= self._value_rel_mask(lo, hi)
+        accepted &= self._row_rel_mask(lo, hi)
         map_values = {}
         for li, op in enumerate(self.sem_ops):
             if isinstance(op, SemMap):
@@ -442,14 +531,16 @@ def _drain(gen) -> RuntimeResult:
 
 def _run_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
                    backend: Backend, partition_size: Optional[int],
-                   coalesce: Optional[int], disp) -> RuntimeResult:
+                   coalesce: Optional[int], disp,
+                   topk_cut: bool = True) -> RuntimeResult:
     return _drain(_stream_streaming(plan, query, items, backend,
-                                    partition_size, coalesce, disp))
+                                    partition_size, coalesce, disp,
+                                    topk_cut=topk_cut))
 
 
 def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
                       backend: Backend, partition_size: Optional[int],
-                      coalesce: Optional[int], disp
+                      coalesce: Optional[int], disp, topk_cut: bool = True
                       ) -> Generator[PartitionResult, None, RuntimeResult]:
     sem_ops = query.semantic_ops
     N = len(items)
@@ -465,7 +556,13 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     # masquerade as engine time
     active_s = 0.0
     seg_t0 = t_start
-    state = _CascadeState(N, sem_ops)
+    state = _CascadeState(N, sem_ops,
+                          post_rels=getattr(plan, "post_relational", ()),
+                          items=items)
+    # SemTopK makes delivery blocking: a tuple's membership depends on
+    # the global rank cut, which needs every candidate scored — emission
+    # is held back until the drain completes and the cut is applied
+    holdback = bool(state.topk_scores)
 
     def fresh_stats() -> List[StageStats]:
         return [StageStats(st.op_name, st.logical_idx, st.stage,
@@ -501,6 +598,8 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
 
     def ready_partitions() -> List[PartitionResult]:
         nonlocal next_emit
+        if holdback:
+            return []
         out = []
         while next_emit < len(bounds):
             lo, hi = bounds[next_emit]
@@ -630,11 +729,20 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         else:
             complete_oldest()
         yield from emit(ready_partitions())
+    if holdback:
+        # every tuple is settled: apply (or defer) the rank cut, then
+        # release all held partitions at once
+        if topk_cut:
+            state.finalize_topk()
+        holdback = False
     yield from emit(ready_partitions())   # all settled post-drain
 
+    deferred = None if topk_cut or not state.topk_scores else (
+        {li: s.copy() for li, s in state.topk_scores.items()},
+        {li: state.topk_candidates(li) for li in state.topk_scores})
     executed = [sg for sg in stats if sg.n_batches > 0]
     return RuntimeResult(
-        accepted=state.result_mask(),
+        accepted=state.result_mask(ignore_topk=deferred is not None),
         map_values=state.map_values,
         runtime_s=sum(sg.wall_s for sg in executed),
         stage_stats=executed,
@@ -643,7 +751,9 @@ def _stream_streaming(plan: PhysicalPlan, query: Query, items: Sequence[Any],
         dispatcher=disp.name, n_workers=disp.n_workers,
         wall_s=active_s + (time.perf_counter() - seg_t0), plan=plan,
         partition_size=None if partition_size is None else part,
-        coalesce=coalesce)
+        coalesce=coalesce,
+        topk_scores=None if deferred is None else deferred[0],
+        topk_cand=None if deferred is None else deferred[1])
 
 
 def stage_stats_by_engine(stage_stats: Sequence[StageStats]
@@ -723,29 +833,55 @@ def _stream_sharded(plan: PhysicalPlan, query: Query, items: Sequence[Any],
     sem_ops = query.semantic_ops
     map_lis = [li for li, op in enumerate(sem_ops)
                if isinstance(op, SemMap)]
+    topk_lis = [li for li, op in enumerate(sem_ops)
+                if isinstance(op, SemTopK)]
 
     shard_ctx = getattr(disp, "shard_context", None)
 
     def one_shard(i: int, lo: int, hi: int) -> RuntimeResult:
+        # SemTopK: shards must never cut locally — each exports raw gold
+        # ranking scores + candidacy, and ONE global cut runs at merge
+        cut = not topk_lis
         if shard_ctx is None:
             return _run_streaming(plan, query, items[lo:hi], backend,
-                                  partition_size, coalesce, inline)
+                                  partition_size, coalesce, inline,
+                                  topk_cut=cut)
         with shard_ctx(i, backend):
             return _run_streaming(plan, query, items[lo:hi], backend,
-                                  partition_size, coalesce, inline)
+                                  partition_size, coalesce, inline,
+                                  topk_cut=cut)
 
     shards = disp.map_shards(one_shard, bounds)
+
+    # global rank cut over the merged shards: identical candidacy and
+    # deterministic tie-break (lower corpus index) reproduce the solo
+    # streaming cut bit-for-bit
+    chosen: Dict[int, np.ndarray] = {}
+    for li in topk_lis:
+        g_scores = np.full(N, np.nan)
+        g_cand = np.zeros(N, bool)
+        for (lo, hi), rr in zip(bounds, shards):
+            g_scores[lo:hi] = rr.topk_scores[li]
+            g_cand[lo:hi] = rr.topk_cand[li]
+        order = np.lexsort((np.arange(N), -g_scores))
+        keep = order[g_cand[order]][:sem_ops[li].k]
+        mask = np.zeros(N, bool)
+        mask[keep] = True
+        chosen[li] = mask
 
     accepted = np.zeros(N, bool)
     map_values: Dict[int, np.ndarray] = {}
     for pi, ((lo, hi), rr) in enumerate(zip(bounds, shards)):
-        accepted[lo:hi] = rr.accepted
+        acc = rr.accepted
+        for li in topk_lis:
+            acc = acc & chosen[li][lo:hi]
+        accepted[lo:hi] = acc
         for li, vals in rr.map_values.items():
             if li not in map_values:
                 map_values[li] = np.zeros(N, object)
             map_values[li][lo:hi] = vals
         pr = PartitionResult(
-            pi, lo, hi, rr.accepted.copy(),
+            pi, lo, hi, acc.copy(),
             {li: (rr.map_values[li].copy() if li in rr.map_values
                   else np.zeros(hi - lo, object)) for li in map_lis},
             stage_stats=rr.stage_stats, wall_s=rr.wall_s)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import relaxation as R
-from repro.core.logical import Query, SemMap
+from repro.core.logical import Query, SemMap, SemTopK
 from repro.core.physical import (PhysicalPlan, PhysicalPlanStage,
                                  ProfiledPipeline)
 from repro.runtime.kernel import decide, gold_decide
@@ -58,8 +58,8 @@ def gold_membership(profiles: Sequence[ProfiledPipeline]) -> np.ndarray:
     return g
 
 
-def pipelines_data(profiles: Sequence[ProfiledPipeline], measured=None
-                   ) -> List[R.PipelineData]:
+def pipelines_data(profiles: Sequence[ProfiledPipeline], measured=None,
+                   sem_ops: Sequence = None) -> List[R.PipelineData]:
     """Lift numpy profiling results into the relaxation's jnp PipelineData.
 
     Profiles carrying fitted CostCurves split cost into marginal per-tuple
@@ -71,9 +71,15 @@ def pipelines_data(profiles: Sequence[ProfiledPipeline], measured=None
     each op's measured flush width from past executions: ops with a
     recorded `mean_batch` are priced at it instead of the static
     BatchHint width (unmeasured ops get NaN, the relaxation's
-    fall-back-to-hint marker)."""
+    fall-back-to-hint marker).
+
+    `sem_ops` (optional, aligned with `profiles`) marks SemTopK
+    pipelines as reject-only (`no_accept`): their non-gold stages may
+    terminate hopeless tuples early but never admit — admission is the
+    gold rank cut."""
     out = []
-    for p in profiles:
+    for li, p in enumerate(profiles):
+        no_accept = sem_ops is not None and isinstance(sem_ops[li], SemTopK)
         if p.cost_curves is not None:
             costs = jnp.asarray([c.per_tuple_s for c in p.cost_curves],
                                 jnp.float32)
@@ -97,11 +103,13 @@ def pipelines_data(profiles: Sequence[ProfiledPipeline], measured=None
             fixed=fixed,
             batch_cap=None if p.batch_caps is None
             else jnp.asarray(p.batch_caps, jnp.float32),
-            meas_width=meas_width))
+            meas_width=meas_width,
+            no_accept=no_accept))
     return out
 
 
-def estimate_selectivities(profiles: Sequence[ProfiledPipeline], plan
+def estimate_selectivities(profiles: Sequence[ProfiledPipeline], plan,
+                           sem_ops: Sequence = None
                            ) -> List[Dict[int, Tuple[float, float, float]]]:
     """Hard-simulate the chosen cascades on the sample to estimate each
     selected op's inter/intra selectivity over the tuples reaching it.
@@ -114,10 +122,15 @@ def estimate_selectivities(profiles: Sequence[ProfiledPipeline], plan
     batch size.
     """
     sel = []
-    for p, params, mask in zip(profiles, plan.params, plan.selected):
+    for li, (p, params, mask) in enumerate(
+            zip(profiles, plan.params, plan.selected)):
         acc_i, rej_i, _ = decide(
             p.scores, np.asarray(params.thr_hi)[:, None],
             np.asarray(params.thr_lo)[:, None], p.is_map)
+        if sem_ops is not None and isinstance(sem_ops[li], SemTopK):
+            # reject-only cascade: at execution the non-gold accept
+            # boundary is +inf, so a learned accept never fires
+            acc_i = np.zeros_like(np.asarray(acc_i), bool)
         n_ops, N = p.scores.shape
         unsure = np.ones(N, bool)
         per_op: Dict[int, Tuple[float, float, float]] = {}

@@ -14,7 +14,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.logical import SemFilter, SemMap
+from repro.core.logical import SemFilter, SemJoin, SemMap
 from repro.core.physical import PhysicalOperator
 from repro.data.synthetic import (N_VALUES, TOK_NO, TOK_YES, Item,
                                   filter_query_token, filter_signal_token,
@@ -133,6 +133,87 @@ class PythonMapOperator(PhysicalOperator):
         return 0.5
 
 
+class KVCachePairOperator(PhysicalOperator):
+    """Pair-scoring operator for SemJoin: runs the join's extraction task
+    over both sides' precomputed KV-cache profiles and scores agreement —
+    positive log-odds when both sides express the same latent value, with
+    magnitude the mean extraction confidence. Two engine calls per batch
+    (left ids, right ids); KV-bytes telemetry counts both sides' cache
+    loads, exactly what the pair cascade really streams."""
+
+    uses_llm = True
+
+    def __init__(self, engine: ServingEngine, model_name: str, ratio: float,
+                 is_gold: bool = False, quant: bool = False):
+        self.engine = engine
+        self.model_name = model_name
+        self.ratio = ratio
+        self.is_gold = is_gold
+        self.quant = quant
+        self.name = (f"{model_name}-pair{int(round(ratio * 100)):02d}"
+                     + ("i8" if quant else ""))
+
+    def _side(self, ids: Sequence[int], op: SemJoin):
+        return self.engine.run_map(
+            self.model_name, self.ratio, ids, [map_query_token(op.task_id)],
+            [value_token(v) for v in range(N_VALUES)], quant=self.quant)
+
+    def run_filter(self, pairs: Sequence[Any], op: SemJoin) -> np.ndarray:
+        vl, cl = self._side([p.left.item_id for p in pairs], op)
+        vr, cr = self._side([p.right.item_id for p in pairs], op)
+        # agreement log-odds: sign from value match, magnitude from the
+        # mean margin (floored so the gold boundary at 0 stays two-sided)
+        margin = np.maximum(0.5 * (np.asarray(cl, np.float32)
+                                   + np.asarray(cr, np.float32)), 1e-3)
+        return np.where(np.asarray(vl) == np.asarray(vr),
+                        margin, -margin).astype(np.float32)
+
+    def cost_model(self) -> float:
+        d = self.engine.models[self.model_name].cfg.d_model
+        cost = 2.0 * d ** 2 * (1.0 - 0.6 * self.ratio)   # two side calls
+        if self.quant:
+            cost *= 0.55
+        return cost
+
+    def max_batch(self):
+        return self.engine.max_batch_for(self.model_name, self.ratio,
+                                         quant=self.quant)
+
+
+class PythonPairOperator(PhysicalOperator):
+    """Generated-code pair matcher: the PythonMapOperator heuristic run on
+    both sides, agreement of the top value-token counts. Decisive only on
+    easy pairs — the cheap front of the pairing cascade."""
+
+    uses_llm = False
+    is_gold = False
+
+    def __init__(self):
+        self.name = "python-pair"
+
+    @staticmethod
+    def _top(tokens, task_id: int) -> Tuple[int, float]:
+        counts = np.zeros(N_VALUES)
+        for t in tokens:
+            for v in range(N_VALUES):
+                if t == map_signal_token(task_id, v):
+                    counts[v] += 1
+        order = np.argsort(counts)[::-1]
+        return int(order[0]), float(counts[order[0]] - counts[order[1]])
+
+    def run_filter(self, pairs: Sequence[Any], op: SemJoin) -> np.ndarray:
+        out = np.zeros(len(pairs), np.float32)
+        for i, p in enumerate(pairs):
+            vl, ml = self._top(p.left.tokens, op.task_id)
+            vr, mr = self._top(p.right.tokens, op.task_id)
+            margin = 0.5 * (ml + mr)
+            out[i] = margin if vl == vr else -margin
+        return out
+
+    def cost_model(self) -> float:
+        return 1.0
+
+
 def make_registry(engine: ServingEngine, *, sm: str = "sm", lg: str = "lg",
                   sm_ratios=(0.8, 0.5, 0.0), lg_ratios=(0.8, 0.5, 0.3),
                   sm_int8=(), lg_int8=(),
@@ -145,6 +226,17 @@ def make_registry(engine: ServingEngine, *, sm: str = "sm", lg: str = "lg",
     """
 
     def registry(op) -> List[PhysicalOperator]:
+        if isinstance(op, SemJoin):
+            pair_ops: List[PhysicalOperator] = []
+            if include_cheap:
+                pair_ops.append(PythonPairOperator())
+            for r in sm_ratios:
+                pair_ops.append(KVCachePairOperator(engine, sm, r))
+            for r in lg_ratios:
+                pair_ops.append(KVCachePairOperator(engine, lg, r))
+            pair_ops.append(KVCachePairOperator(engine, lg, 0.0,
+                                                is_gold=True))
+            return pair_ops
         ops: List[PhysicalOperator] = []
         if isinstance(op, SemFilter):
             if include_cheap:

@@ -1,0 +1,413 @@
+"""Semantic algebra tests: sem_join / sem_topk / sem_agg through the
+logical plan tree.
+
+Pins the refactor's load-bearing invariants:
+
+  - checked pushdown: RelFilters move ahead of LLM stages only when
+    legal (never across a SemMap producing their column, never across a
+    SemTopK/SemAgg barrier); pushdown shrinks the priced corpus without
+    changing decisions; legacy filter/map queries are untouched.
+  - dispatcher parity: top-k and join-tree decisions plus per-stage
+    n_tuples / n_llm_calls / kv_bytes are bit-identical across inline /
+    threads / sharded / mesh dispatchers, and solo vs scheduler
+    (FlushHub) admission.
+  - quality: a planned join / top-k meets its declared recall target
+    against the gold reference on the planted synthetic corpora, with
+    the error budget visibly split across the tree's pipelines.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cache.store import CacheStore
+from repro.api import Session
+from repro.core.physical import PhysicalOperator
+from repro.runtime import OracleBackend
+from repro.scheduler import QueryScheduler
+from repro.core import PlannerConfig, Query, RelFilter, SemFilter, SemMap
+from repro.core.logical import (AggNode, JoinNode, PipelineLeaf, SemAgg,
+                                SemJoin, SemTopK, TopKNode, as_tree,
+                                lower_tree, normalize, pinned_relational,
+                                pull_up_semantic)
+from repro.core.planner import _effective_targets, plan_query, plan_tree
+from repro.data.synthetic import (make_dataset, make_join_corpora,
+                                  make_planted_params, planted_config)
+from repro.runtime import as_backend, run_plan
+from repro.runtime.plan_utils import gold_plan_for
+from repro.runtime.tree import (evaluate_pairs, make_pairs, run_gold_tree,
+                                run_tree, survivor_pairs)
+from repro.serving.engine import ServingEngine
+from repro.serving.operators import make_registry
+
+FAST = PlannerConfig(steps=150, restarts=2, snapshots=3)
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    ds = make_dataset("alg", 120, seed=5)
+    left, right = make_join_corpora(n_left=60, n_right=60, seed=3)
+    store = CacheStore(str(tmp_path_factory.mktemp("cache")))
+    eng = ServingEngine(store)
+    for size in ("sm", "lg"):
+        cfg = planted_config(size)
+        eng.register_model(size, cfg, make_planted_params(cfg, seed=1))
+        for items in (ds.items, left.items, right.items):
+            eng.build_profiles(size, items, ratios=[0.0, 0.3, 0.5, 0.8],
+                               prefill_batch=40)
+    registry = make_registry(eng)
+    return ds, left, right, registry
+
+
+def _stat_key(stats):
+    """Schedule-invariant telemetry fingerprint: per (logical op, stage,
+    operator) the exact tuples scored, LLM calls, and KV bytes."""
+    out = {}
+    for sg in stats:
+        key = (sg.logical_idx, sg.stage, sg.op_name)
+        t, l, k = out.get(key, (0, 0, 0))
+        out[key] = (t + sg.n_tuples, l + sg.n_llm_calls, k + sg.kv_bytes)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RelFilter semantics (unit)
+# ---------------------------------------------------------------------------
+
+def test_relfilter_missing_column_and_new_ops():
+    assert RelFilter("year", "<", 2000).apply({}) is False       # missing
+    assert RelFilter("year", ">", 2000).apply({"year": None}) is False
+    assert RelFilter("year", "<=", 2000).apply({"year": 2000})
+    assert RelFilter("year", ">=", 2000).apply({"year": 2000})
+    assert not RelFilter("year", ">=", 2001).apply({"year": 2000})
+    assert RelFilter("tags", "contains", "a").apply({"tags": ["a", "b"]})
+    assert not RelFilter("tags", "contains", "z").apply({"tags": ["a"]})
+    assert RelFilter("cat", "in", ("x", "y")).apply({"cat": "x"})
+    # incomparable types reject cleanly instead of raising
+    assert RelFilter("year", "<", 2000).apply({"year": "nineteen"}) is False
+
+
+def test_relfilter_rejects_unknown_op_at_construction():
+    with pytest.raises(ValueError, match="not supported"):
+        RelFilter("year", "=", 2000)
+    with pytest.raises(ValueError, match="not supported"):
+        RelFilter("year", "like", "x")
+
+
+def test_topk_agg_construction_validation():
+    with pytest.raises(ValueError, match="k must be"):
+        SemTopK("t", 1, k=0)
+    with pytest.raises(ValueError, match="mode"):
+        SemAgg("a", 1, how="sum")
+    assert SemTopK("t", 1, k=3).k == 3
+    assert SemAgg("a", 1, group_by="cat").how == "mode"
+
+
+# ---------------------------------------------------------------------------
+# checked pushdown (unit)
+# ---------------------------------------------------------------------------
+
+def test_pushdown_never_crosses_producing_map():
+    """Regression for the unchecked pull-up: a RelFilter over a SemMap's
+    output column must stay pinned behind the map — the value it
+    filters does not exist before the map runs."""
+    m = SemMap("extract", 3, out_column="v")
+    pinned = RelFilter("v", "==", 10)
+    free = RelFilter("year", ">", 2000)
+    q = Query([m, pinned, free])
+    n = normalize(q)
+    assert n.nodes == [free, m, pinned]          # free moved, pinned stayed
+    assert pull_up_semantic(q).nodes == n.nodes  # alias is the checked one
+    assert pinned_relational(n) == [(pinned, 0)]
+
+
+def test_pushdown_never_crosses_topk_barrier():
+    """Filtering before a rank cut is a different query: RelFilters
+    declared after a SemTopK/SemAgg stay pinned (post-cut row filters)."""
+    topk = SemTopK("rank", 2, k=5)
+    post = RelFilter("year", ">", 2000)
+    q = Query([topk, post])
+    n = normalize(q)
+    assert n.nodes == [topk, post]
+    assert pinned_relational(n) == [(post, None)]
+    agg = SemAgg("a", 1, group_by="category")
+    n2 = normalize(Query([agg, post]))
+    assert n2.nodes == [agg, post]
+
+
+def test_lower_tree_and_as_tree():
+    leaf = as_tree(Query([SemFilter("f", 1)]))
+    assert isinstance(leaf, PipelineLeaf)
+    t = lower_tree(TopKNode(leaf, SemTopK("t", 2, k=4)))
+    assert isinstance(t, PipelineLeaf) and isinstance(t.nodes[-1], SemTopK)
+    a = lower_tree(AggNode(leaf, SemAgg("a", 3)))
+    assert isinstance(a.nodes[-1], SemAgg)
+    join = JoinNode(leaf, leaf, SemJoin("j", 3))
+    with pytest.raises(ValueError, match="not supported"):
+        lower_tree(TopKNode(join, SemTopK("t", 2, k=4)))
+
+
+def test_survivor_pairs_blocking_and_order():
+    class It:
+        def __init__(self, i, cat):
+            self.item_id = i
+            self.row = {"category": cat}
+            self.tokens = []
+    L = [It(0, "a"), It(1, "b"), It(2, None)]
+    R = [It(10, "b"), It(11, "a"), It(12, "a")]
+    pairs = survivor_pairs(L, R, "category")
+    assert [p.item_id for p in pairs] == [(0, 11), (0, 12), (1, 10)]
+    assert all(p.row["category"] is not None for p in pairs)
+    full = survivor_pairs(L, R, None)
+    assert len(full) == 9
+    with pytest.raises(ValueError, match="equal-length"):
+        make_pairs(L, R[:2])
+
+
+# ---------------------------------------------------------------------------
+# pushdown shrinks the priced corpus without changing decisions
+# ---------------------------------------------------------------------------
+
+def test_pushdown_shrinks_priced_corpus_same_decisions(world):
+    ds, _, _, registry = world
+    rel = RelFilter("category", "==", "news")
+    sem = SemFilter("f1", 1)
+    q_after = Query([sem, rel], target_recall=0.6, target_precision=0.6)
+    q_before = Query([rel, sem], target_recall=0.6, target_precision=0.6)
+    # declared order does not matter: both normalize to the pushed form
+    assert normalize(q_after).nodes == normalize(q_before).nodes
+
+    plan = plan_query(q_after, ds.items, registry, FAST, sample_frac=0.3)
+    assert [r.column for r in plan.relational] == ["category"]
+    assert not plan.post_relational
+
+    # the pushdown proof on ONE plan (planning twice re-measures operator
+    # wall costs, so separate plans differ in thresholds by design):
+    # identical stages with the predicate applied pre- vs post-cascade
+    # must decide identically, and the pushed variant prices fewer tuples
+    p_post = dataclasses.replace(plan, relational=[],
+                                 post_relational=[(rel, None)])
+    r_push = run_plan(plan, q_after, ds.items, registry)
+    r_post = run_plan(p_post, q_after, ds.items, registry)
+    np.testing.assert_array_equal(r_push.accepted, r_post.accepted)
+    assert r_push.n_llm_tuples < r_post.n_llm_tuples
+    # and the pushed predicate never leaks a non-matching row
+    news = np.array([it.row["category"] == "news" for it in ds.items])
+    assert not (r_push.accepted & ~news).any()
+
+
+def test_legacy_filter_map_query_unchanged(world):
+    """Pre-tree queries (filters/maps + leading relational) are exactly
+    the old flat pipeline: normalization is the identity, nothing gets
+    pinned, and execution is dispatcher-invariant as before."""
+    ds, _, _, registry = world
+    q = Query([RelFilter("year", ">", 2000), SemFilter("f1", 1),
+               SemMap("m3", 3)], target_recall=0.7, target_precision=0.7)
+    assert normalize(q).nodes == q.nodes
+    assert pull_up_semantic(q).nodes == q.nodes
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.3)
+    assert plan.post_relational == []
+    r1 = run_plan(plan, q, ds.items, registry)
+    r2 = run_plan(plan, q, ds.items, registry, dispatcher="threads:4")
+    np.testing.assert_array_equal(r1.accepted, r2.accepted)
+    np.testing.assert_array_equal(r1.map_values[1], r2.map_values[1])
+    assert _stat_key(r1.stage_stats) == _stat_key(r2.stage_stats)
+
+
+# ---------------------------------------------------------------------------
+# sem_topk: rank-cut execution, dispatcher parity, quality
+# ---------------------------------------------------------------------------
+
+def test_topk_parity_and_quality(world):
+    ds, _, _, registry = world
+    k = 30
+    q = Query([SemTopK("rank f2", 2, k=k)],
+              target_recall=0.6, target_precision=0.6)
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.3)
+    # reject-only cascade: no non-gold stage may accept early
+    for s in plan.stages:
+        if not s.is_gold:
+            assert s.thr_hi == float("inf")
+
+    runs = {
+        "inline": run_plan(plan, q, ds.items, registry),
+        "threads": run_plan(plan, q, ds.items, registry,
+                            dispatcher="threads:4"),
+        "sharded": run_plan(plan, q, ds.items, registry,
+                            dispatcher="sharded:3", partition_size=40),
+        "mesh": run_plan(plan, q, ds.items, registry, dispatcher="mesh:2",
+                         partition_size=40),
+    }
+    base = runs["inline"]
+    assert int(base.accepted.sum()) == k
+    for name, r in runs.items():
+        np.testing.assert_array_equal(r.accepted, base.accepted,
+                                      err_msg=name)
+        assert _stat_key(r.stage_stats) == _stat_key(base.stage_stats), name
+
+    gold = run_plan(gold_plan_for(q, as_backend(registry)), q, ds.items,
+                    registry)
+    assert int(gold.accepted.sum()) == k
+    overlap = int((base.accepted & gold.accepted).sum())
+    if plan.feasible:
+        assert overlap / k >= 0.55       # statistical target, headroom
+    # early termination really happened: the gold scorer saw no more
+    # tuples than the corpus (cheap stages reject hopeless items first)
+    gold_names = {s.op_name for s in plan.stages if s.is_gold}
+    gold_tuples = sum(sg.n_tuples for sg in base.stage_stats
+                      if sg.op_name in gold_names)
+    assert gold_tuples <= len(ds.items)
+
+
+def test_topk_post_barrier_row_filter(world):
+    """A RelFilter after the SemTopK filters the RESULT, post-cut: at
+    most k survivors, all satisfying the predicate, and the ranked set
+    itself is unaffected by the filter (same query without it admits a
+    superset)."""
+    ds, _, _, registry = world
+    k = 25
+    topk = SemTopK("rank f2", 2, k=k)
+    post = RelFilter("year", ">", 2007)
+    q = Query([topk, post], target_recall=0.6, target_precision=0.6)
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.3)
+    assert [r for r, li in plan.post_relational] == [post]
+    res = run_plan(plan, q, ds.items, registry)
+    years = np.array([it.row["year"] > 2007 for it in ds.items])
+    assert not (res.accepted & ~years).any()
+    assert int(res.accepted.sum()) <= k
+
+    # post-cut semantics on the SAME stages: stripping the pinned filter
+    # yields the unfiltered rank cut, and filtered == cut ∩ predicate —
+    # the filter selects FROM the top-k, it never changes the ranking
+    p_plain = dataclasses.replace(plan, post_relational=[])
+    plain = run_plan(p_plain, Query([topk], 0.6, 0.6), ds.items, registry)
+    assert int(plain.accepted.sum()) == k
+    np.testing.assert_array_equal(res.accepted, plain.accepted & years)
+
+
+# ---------------------------------------------------------------------------
+# sem_join: tree planning, budget split, parity, quality
+# ---------------------------------------------------------------------------
+
+def test_join_tree_budget_split_parity_quality(world):
+    _, left, right, registry = world
+    tree = JoinNode(PipelineLeaf((SemFilter("lf", 1),)),
+                    PipelineLeaf((SemFilter("rf", 4),)),
+                    SemJoin("same v3", 3, on="category"))
+    plan = plan_tree(tree, left.items, right.items, registry, FAST,
+                     target_recall=0.7, target_precision=0.7,
+                     sample_frac=0.5)
+    # the query-level budget is split across every pipeline of the tree
+    assert set(plan.split) == {"left", "right", "pair"}
+    assert all(0.0 <= v <= 1.0 for rp in plan.split.values() for v in rp)
+    assert plan.est_pairs >= 1
+    # telemetry tiles: tree-unique (logical_idx, stage, op) keys
+    keys = [(s.logical_idx, s.stage, s.op_name) for s in plan.stages]
+    assert len(keys) == len(set(keys))
+
+    r_in = run_tree(plan, left.items, right.items, registry)
+    r_th = run_tree(plan, left.items, right.items, registry,
+                    dispatcher="threads:4")
+    r_mesh = run_tree(plan, left.items, right.items, registry,
+                      dispatcher="mesh:2", partition_size=32)
+    assert r_th.pair_ids == r_in.pair_ids
+    assert r_mesh.pair_ids == r_in.pair_ids
+    assert _stat_key(r_th.stage_stats) == _stat_key(r_in.stage_stats)
+    assert _stat_key(r_mesh.stage_stats) == _stat_key(r_in.stage_stats)
+
+    gold = run_gold_tree(plan, left.items, right.items, registry)
+    m = evaluate_pairs(r_in, gold)
+    assert m["n_gold"] > 0
+    if plan.feasible:
+        assert m["recall"] >= 0.55       # declared 0.7, headroom
+    # blocking really shrank the pair corpus below the full cross product
+    n_l = int(r_in.roles["left"].accepted.sum())
+    n_r = int(r_in.roles["right"].accepted.sum())
+    assert len(r_in.pair_items) < max(n_l * n_r, 1) or n_l * n_r == 0
+
+
+def test_join_blocking_mismatch_raises(world):
+    _, left, right, registry = world
+    tree = JoinNode(PipelineLeaf(()), PipelineLeaf(()),
+                    SemJoin("j", 3, on="no_such_column"))
+    with pytest.raises(ValueError, match="eliminated every sample pair"):
+        plan_tree(tree, left.items, right.items, registry, FAST,
+                  sample_frac=0.35)
+
+
+# ---------------------------------------------------------------------------
+# solo vs scheduler (FlushHub) parity for the new operators
+# ---------------------------------------------------------------------------
+
+class _DetFilter(PhysicalOperator):
+    """Deterministic batch-composition-independent scorer (no engine)."""
+    uses_llm = True
+
+    def __init__(self, name, is_gold=False):
+        self.name = name
+        self.is_gold = is_gold
+
+    def run_filter(self, items, op):
+        idx = np.asarray([it.item_id for it in items], np.float64)
+        return np.asarray(
+            3.0 * np.sin(idx * 12.9898 + op.task_id * 78.233), np.float32)
+
+
+def test_topk_solo_vs_scheduler_parity():
+    """SemTopK admitted through the QueryScheduler's FlushHub (frozen op
+    in the coalescing key) decides bit-identically to its solo run, with
+    exactly-tiling per-stage telemetry."""
+    tiny = PlannerConfig(steps=40, restarts=1, snapshots=2)
+    ops = [_DetFilter("cheap"), _DetFilter("gold", is_gold=True)]
+    sess = Session(backend=OracleBackend(lambda op: ops), planner=tiny,
+                   sample_frac=0.5)
+    ds = make_dataset("alg-sched", 80, seed=11)
+    frames = [(sess.frame(ds.items)
+               .sem_topk(f"rank t{t}", task_id=t, k=20)
+               .with_guarantees(recall=0.7, precision=0.7))
+              for t in (1, 2)]
+    solo = [f.execute() for f in frames]
+    for f in frames:
+        f.plan()
+    with QueryScheduler(sess, max_concurrent=4, paused=True) as sched:
+        handles = [sched.submit(f) for f in frames]
+        sched.resume()
+        results = [h.result(timeout=120) for h in handles]
+    for r, s in zip(results, solo):
+        assert int(s.accepted.sum()) == 20
+        np.testing.assert_array_equal(r.accepted, s.accepted)
+        assert _stat_key(r.stage_stats) == _stat_key(s.stage_stats)
+
+
+# ---------------------------------------------------------------------------
+# sem_agg: group-wise guarantee tightening + aggregate correctness
+# ---------------------------------------------------------------------------
+
+def test_agg_tightens_targets_and_matches_gold(world):
+    ds, _, _, registry = world
+    q = Query([SemAgg("mode v1", 1, group_by="category")],
+              target_recall=0.8, target_precision=0.8)
+    # group-level guarantee -> tightened per-item targets
+    rec, prec = _effective_targets(q, ds.items)
+    assert rec > 0.8 and prec > 0.8
+    ungrouped = Query([SemAgg("mode v1", 1)], 0.8, 0.8)
+    assert _effective_targets(ungrouped, ds.items) == (0.8, 0.8)
+
+    plan = plan_query(q, ds.items, registry, FAST, sample_frac=0.3)
+    res = run_plan(plan, q, ds.items, registry)
+    gold = run_plan(gold_plan_for(q, as_backend(registry)), q, ds.items,
+                    registry)
+
+    def agg_mode(r):
+        groups = {}
+        for it, ok, v in zip(ds.items, r.accepted, r.map_values[0]):
+            if ok:
+                groups.setdefault(it.row["category"], []).append(int(v))
+        return {g: max({x: vs.count(x) for x in vs}.items(),
+                       key=lambda kv: (kv[1], -kv[0]))[0]
+                for g, vs in groups.items()}
+
+    got, want = agg_mode(res), agg_mode(gold)
+    assert set(got) == set(want)
+    agree = sum(got[g] == want[g] for g in want)
+    assert agree >= len(want) - 1        # group aggregates track gold
