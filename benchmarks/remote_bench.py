@@ -1,0 +1,228 @@
+"""Remote-engine loopback overhead smoke: wire cost per flush, and
+coalesced-vs-solo wire calls.
+
+Builds one two-tier pool twice against the same corpus — all-local
+(fast sm engine + accurate lg gold) and with the fast tier served by an
+in-process loopback worker (`EngineSpec(address=...)`) — then measures:
+
+  parity    — the SAME plan executed by both pools must produce
+              bit-identical decisions and map values (the subsystem's
+              core guarantee; a bench that breaks it fails even
+              without --gate)
+  overhead  — wall-clock factor of the remote run over the local run,
+              plus the member's measured RTT p50/p95 per wire call
+              (server time subtracted, so this is pure wire + codec)
+  coalesce  — K copies of the query through the QueryScheduler vs K
+              solo runs: cross-query flush merging must reach the wire
+              as strictly fewer remote calls
+
+and merges the row into the newest BENCH_*.json under a separate
+"remote" key (the kernels gate only reads "rows"). With ``--gate`` it
+exits non-zero on a parity break, zero saved wire calls, or a loopback
+RTT p50 past ``--max-rtt-ms`` — the regression tripwire for protocol
+bloat (every frame layer shows up directly in that number).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import EngineSpec, Session, SessionConfig  # noqa: E402
+from repro.core import PlannerConfig  # noqa: E402
+from repro.data.synthetic import make_dataset  # noqa: E402
+from repro.remote import RemoteWorker, start_server  # noqa: E402
+from repro.remote.client import remote_members  # noqa: E402
+from repro.scheduler import QueryScheduler  # noqa: E402
+
+N_ITEMS = 90          # the planted two-tier workload that mixes engines
+FAST_SPEC = dict(models=("sm",), sm_ratios=(0.8, 0.5), lg_ratios=())
+PLANNER = PlannerConfig(steps=120, restarts=2, snapshots=2)
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "nogit"
+    except Exception:
+        return "nogit"
+
+
+def _session(fast_spec: EngineSpec) -> Session:
+    return Session(SessionConfig(
+        engines=(fast_spec,
+                 EngineSpec("accurate", models=("lg",), sm_ratios=(),
+                            lg_ratios=(0.5,), include_cheap=False,
+                            cache_dir=tempfile.mkdtemp(
+                                prefix="stretto_bench_acc_"))),
+        gold_engine="accurate",
+        planner=PLANNER, sample_frac=0.35, partition_size=40))
+
+
+def _frame(sess: Session, items):
+    return (sess.frame(items)
+            .sem_filter("f1", 1)
+            .sem_map("extract v2", 2)
+            .with_guarantees(recall=0.7, precision=0.7))
+
+
+def run_bench(n_queries: int = 4) -> Dict:
+    ds = make_dataset("remote-bench", N_ITEMS, seed=7)
+    worker = RemoteWorker(
+        "fast", cache_dir=tempfile.mkdtemp(prefix="stretto_bench_wrk_"),
+        **FAST_SPEC)
+    server, _, addr = start_server(worker)
+    local = _session(EngineSpec(
+        "fast", cache_dir=tempfile.mkdtemp(prefix="stretto_bench_fst_"),
+        **FAST_SPEC))
+    remote = _session(EngineSpec("fast", address=addr))
+    try:
+        local.prepare(ds.items)
+        remote.prepare(ds.items)
+        query = _frame(local, ds.items).to_query()
+        plan = local.plan(query, ds.items)
+        n_fast = sum(st.engine == "fast" for st in plan.stages)
+
+        t0 = time.monotonic()
+        lr = local.run(plan, query, ds.items, dispatcher="inline")
+        local_wall = time.monotonic() - t0
+        t0 = time.monotonic()
+        rr = remote.run(plan, query, ds.items, dispatcher="inline")
+        remote_wall = time.monotonic() - t0
+
+        parity = bool(
+            np.array_equal(rr.accepted, lr.accepted)
+            and set(rr.map_values) == set(lr.map_values)
+            and all(np.array_equal(rr.map_values[li], lr.map_values[li])
+                    for li in lr.map_values))
+        wire = rr.remote or {}
+
+        # coalesced vs solo wire calls through the concurrent scheduler
+        member = remote_members(remote.backend)[0]
+        frame = _frame(remote, ds.items)
+        frame.plan()          # planning profiles over the wire — keep
+        #                       those calls out of both measured sides
+        before = member.snapshot()["calls"]
+        solo = frame.execute(dispatcher="inline")
+        solo_calls = member.snapshot()["calls"] - before
+        before = member.snapshot()["calls"]
+        with QueryScheduler(remote, max_concurrent=n_queries,
+                            paused=True) as sched:
+            handles = [sched.submit(frame) for _ in range(n_queries)]
+            sched.resume()
+            results = [h.result(timeout=600) for h in handles]
+        sched_calls = member.snapshot()["calls"] - before
+        parity = parity and all(
+            np.array_equal(r.accepted, solo.accepted) for r in results)
+
+        return {
+            "name": "remote_loopback_overhead",
+            "n_items": N_ITEMS,
+            "n_fast_stages": n_fast,
+            "n_queries": n_queries,
+            "parity": parity,
+            "local_wall_s": local_wall,
+            "remote_wall_s": remote_wall,
+            "overhead_factor": remote_wall / max(local_wall, 1e-9),
+            "wire_calls": wire.get("calls", 0),
+            "wire_kb": wire.get("wire_kb", 0.0),
+            "rtt_ms_p50": wire.get("rtt_ms_p50", 0.0),
+            "rtt_ms_p95": wire.get("rtt_ms_p95", 0.0),
+            "fallbacks": wire.get("fallbacks", 0),
+            "solo_wire_calls": solo_calls,
+            "scheduled_wire_calls": sched_calls,
+            "saved_wire_calls": n_queries * solo_calls - sched_calls,
+        }
+    finally:
+        local.close()
+        remote.close()
+        server.shutdown()
+        server.server_close()
+
+
+def _emit_artifact(row: Dict, out_dir: str) -> str:
+    """Merge under "remote" into the newest BENCH_*.json (the artifact
+    CI uploads), else write a standalone file."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
+    if paths:
+        path = paths[-1]
+        with open(path) as f:
+            artifact = json.load(f)
+        artifact["remote"] = row
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=1)
+        return path
+    ts = time.strftime("%Y%m%dT%H%M%SZ", time.gmtime())
+    path = os.path.join(out_dir, f"BENCH_{ts}-{_git_sha()}.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "stretto-remote-bench-v1", "ts": ts,
+                   "sha": _git_sha(), "remote": row}, f, indent=1)
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller run (2 scheduled queries)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on parity break, zero saved wire calls, "
+                         "or RTT p50 past --max-rtt-ms")
+    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--max-rtt-ms", type=float, default=25.0,
+                    help="--gate: max loopback RTT p50 per wire call")
+    ap.add_argument("--out", default="results/bench",
+                    help="artifact directory (merges into the newest "
+                         "BENCH_*.json there)")
+    args = ap.parse_args(argv)
+
+    n_queries = args.queries or (2 if args.smoke else 4)
+    row = run_bench(n_queries)
+    print(f"[remote] {row['n_items']} items, {row['n_fast_stages']} fast "
+          f"stages over the wire: local {row['local_wall_s']:.2f}s vs "
+          f"remote {row['remote_wall_s']:.2f}s "
+          f"({row['overhead_factor']:.2f}x), "
+          f"{row['wire_calls']} calls / {row['wire_kb']:.1f} KiB, "
+          f"rtt p50 {row['rtt_ms_p50']:.2f}ms p95 "
+          f"{row['rtt_ms_p95']:.2f}ms")
+    print(f"[remote] scheduler: {row['n_queries']}x solo = "
+          f"{row['n_queries'] * row['solo_wire_calls']} wire calls, "
+          f"scheduled = {row['scheduled_wire_calls']} "
+          f"({row['saved_wire_calls']} saved), "
+          f"parity={'ok' if row['parity'] else 'BROKEN'}")
+
+    failed = False
+    if not row["parity"]:
+        print("[remote] FAIL: remote decisions diverged from local")
+        failed = True
+    if row["n_fast_stages"] == 0 or row["wire_calls"] == 0:
+        print("[remote] FAIL: no stage actually went over the wire")
+        failed = True
+    if args.gate and row["saved_wire_calls"] <= 0:
+        print("[remote] FAIL: scheduler saved no wire calls")
+        failed = True
+    if args.gate and row["rtt_ms_p50"] > args.max_rtt_ms:
+        print(f"[remote] FAIL: rtt p50 {row['rtt_ms_p50']:.2f}ms > "
+              f"{args.max_rtt_ms:.2f}ms")
+        failed = True
+
+    path = _emit_artifact(row, args.out)
+    print(f"[remote] wrote {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,84 @@
+"""Test/CI helpers: spawn a remote worker as a real subprocess.
+
+In-process workers (`start_server` on a thread) cover protocol and
+parity tests; the subprocess spawner exists for the robustness tests
+that SIGKILL a worker mid-run — an in-process server cannot die without
+taking the test down with it.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+from typing import List, Optional, Sequence, Tuple
+
+import repro
+
+
+def worker_argv(*, host: str = "127.0.0.1", port: int = 0,
+                name: str = "remote", models: Sequence[str] = ("sm", "lg"),
+                sm_ratios: Sequence[float] = (0.8, 0.5, 0.0),
+                lg_ratios: Sequence[float] = (0.8, 0.5, 0.3),
+                include_cheap: bool = True, model_seed: int = 1,
+                extra: Sequence[str] = ()) -> List[str]:
+    argv = [sys.executable, "-m", "repro.launch.remote_worker",
+            "--host", host, "--port", str(port), "--name", name,
+            "--models", ",".join(models),
+            "--sm-ratios", ",".join(str(r) for r in sm_ratios),
+            "--lg-ratios", ",".join(str(r) for r in lg_ratios),
+            "--model-seed", str(model_seed)]
+    if not include_cheap:
+        argv.append("--no-cheap")
+    argv.extend(extra)
+    return argv
+
+
+def spawn_worker(timeout_s: float = 120.0, **kwargs
+                 ) -> Tuple[subprocess.Popen, str]:
+    """Start a worker subprocess and wait for its LISTENING line.
+    Returns (proc, "host:port"); kill the proc yourself (it is a real
+    process — SIGKILL it to simulate a worker crash)."""
+    env = dict(os.environ)
+    src_root = os.path.dirname(os.path.dirname(repro.__file__))
+    env["PYTHONPATH"] = src_root + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        worker_argv(**kwargs), env=env, stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+
+    address: Optional[str] = None
+    deadline_lines: List[str] = []
+
+    def _fail(reason: str):
+        proc.kill()
+        raise RuntimeError(
+            f"remote worker failed to start ({reason}); output:\n"
+            + "".join(deadline_lines))
+
+    timer = threading.Timer(timeout_s, proc.kill)
+    timer.start()
+    try:
+        assert proc.stdout is not None
+        for line in proc.stdout:
+            deadline_lines.append(line)
+            if line.startswith("LISTENING "):
+                address = line.split(None, 1)[1].strip()
+                break
+        if address is None:
+            _fail("no LISTENING line before exit/timeout")
+    finally:
+        timer.cancel()
+
+    # drain the rest of stdout so the worker never blocks on a full pipe
+    def _drain(stream):
+        try:
+            for _ in stream:
+                pass
+        except ValueError:
+            pass
+
+    threading.Thread(target=_drain, args=(proc.stdout,),
+                     daemon=True).start()
+    return proc, address

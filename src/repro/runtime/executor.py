@@ -195,6 +195,11 @@ class RuntimeResult:
     # no shard ever cuts locally. None on every normally-cut result.
     topk_scores: Optional[Dict[int, np.ndarray]] = None
     topk_cand: Optional[Dict[int, np.ndarray]] = None
+    # wire telemetry of the run's remote engine members (calls, retries,
+    # fallbacks, rtt percentiles, bytes on wire — see
+    # repro.remote.client.remote_run_info). None when the session has no
+    # remote members or the run made no wire calls.
+    remote: Optional[Dict[str, Any]] = None
 
     @property
     def stage_times(self) -> List[Tuple[str, float, int]]:

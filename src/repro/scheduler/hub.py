@@ -27,7 +27,9 @@ share of the merged call's wall time).
 Deadlock-freedom: quiescence is detected as ``blocked >= active`` with
 no fired group still executing; a driver doing long non-flush work
 (planning, decision kernels) delays firing at most `patience_s`, after
-which pending groups fire without it. A pump-thread failure fails every
+which pending groups fire without it. The same patience window bounds
+how long a fired-but-slow group (a remote member on a bad link) can
+hold back unrelated parked groups. A pump-thread failure fails every
 parked flush instead of hanging its drivers.
 """
 from __future__ import annotations
@@ -242,7 +244,13 @@ class FlushHub:
                 for _, m in self._groups.values()):
             return True
         if self._in_service:
-            return False      # a completing group will wake new work
+            # a completing group normally wakes the next round (maximal
+            # merging) — but a SLOW member (a remote engine on a bad
+            # link, say) must not stall unrelated parked groups past the
+            # patience window: after patience_s they fire anyway (under
+            # "threads" execution they overlap the straggler; decisions
+            # are unchanged — merging only regroups batches)
+            return (time.monotonic() - self._last_change) >= self._patience
         # quiescence: every live driver is blocked on an unfired flush —
         # nobody can add to this round, so merging is maximal
         if self._blocked >= self._active:
@@ -250,7 +258,10 @@ class FlushHub:
         return (time.monotonic() - self._last_change) >= self._patience
 
     def _wait_timeout(self) -> Optional[float]:
-        if self._groups and not self._in_service:
+        # the patience timer is armed whenever anything is parked — also
+        # while a fired group is still executing, else a straggling
+        # member leaves parked groups waiting on its completion forever
+        if self._groups:
             left = self._patience - (time.monotonic() - self._last_change)
             return max(left, 1e-3)
         return None

@@ -347,9 +347,14 @@ class ServingEngine:
             return 0
         em = self.models[model_name]
         profile = Profile(model_name, ratio, quant)
-        if self.store.item_nbytes(profile, item_ids[0]) is None:
-            return 0                     # profile not built yet
-        ids = list(item_ids)
+        # a cold-started engine (e.g. a remote worker warmed before its
+        # first corpus sync) may hold none — or only some — of the ids
+        # for this rung: stage what exists, skip the rest. Probing only
+        # the first id would crash the load below whenever the rung is
+        # partially built.
+        ids = [int(i) for i in item_ids if self.store.has(profile, i)]
+        if not ids:
+            return 0                     # rung not built (yet): no-op
         bs = self._batch_size(profile, ids)
         query_tokens = [0] * max(int(query_len), 1)
         n = 0
